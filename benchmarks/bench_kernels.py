@@ -1,0 +1,61 @@
+"""Kernel-layer microbenches: Pallas (interpret on CPU; Mosaic on TPU) vs
+pure-jnp oracle timing + allclose, and the paper's vectorized estimator
+throughput (Algorithm 1 core)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SingleForkPolicy, estimate
+from repro.kernels import ops, ref
+
+from .common import time_us
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention (modest CPU-feasible shape)
+    B, S, H, D = 1, 512, 4, 64
+    q, k, v = (jax.random.normal(kk, (B, S, H, D), jnp.float32) for kk in jax.random.split(key, 3))
+    us_ref = time_us(lambda: ref.flash_attention_ref(q, k, v, causal=True), iters=3)
+    out_k = ops.flash_attention(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(out_k - ref.flash_attention_ref(q, k, v, causal=True))))
+    rows.append(("flash_attention_ref_jnp", us_ref, f"pallas_allclose_err={err:.2e}"))
+
+    # ssd scan
+    Bt, Sq, Hh, P, G, N = 1, 512, 4, 64, 1, 64
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (Bt, Sq, Hh, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, Sq, Hh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Hh,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (Bt, Sq, G, N))
+    Cm = jax.random.normal(ks[4], (Bt, Sq, G, N))
+    Dm = jnp.ones((Hh,))
+    from repro.models.ssm import ssd_chunked
+
+    us_ref = time_us(lambda: ssd_chunked(x, dt, A, Bm, Cm, Dm, 128)[0], iters=3)
+    yk, _ = ops.ssd_scan(x, dt, A, Bm, Cm, Dm, chunk=128)
+    yr, _ = ssd_chunked(x, dt, A, Bm, Cm, Dm, 128)
+    err = float(jnp.max(jnp.abs(yk - yr)))
+    rows.append(("ssd_scan_ref_jnp", us_ref, f"pallas_allclose_err={err:.2e}"))
+
+    # residual sampler (the paper's Algorithm-1 hot loop)
+    u = jax.random.uniform(key, (1000, 103, 2))
+    xs = jnp.sort(jax.random.exponential(key, (1026,)))
+    us_ref = time_us(lambda: ref.residual_sample_ref(u, xs)[0], iters=3)
+    mk, sk = ops.residual_sample(u, xs)
+    mr, sr = ref.residual_sample_ref(u, xs)
+    err = float(jnp.max(jnp.abs(mk - mr)))
+    rows.append(("residual_sampler_ref_jnp", us_ref, f"pallas_allclose_err={err:.2e}"))
+
+    # end-to-end Algorithm 1 throughput (m=1000 bootstrap replicates)
+    rng = np.random.default_rng(0)
+    trace = rng.exponential(100, 1026) + 50
+    pol = SingleForkPolicy(0.1, 1, True)
+    us = time_us(lambda: estimate(trace, pol, m=1000).latency, iters=3)
+    rows.append(("algorithm1_m1000_n1026", us, "bootstrap_estimate_full"))
+    return rows

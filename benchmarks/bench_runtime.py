@@ -1,0 +1,64 @@
+"""Framework-layer benches: straggler-aware trainer step economics vs
+baseline scheduling on a fail-slow cluster, and hedged-serving tail
+latency — the paper's policies running inside the real runtime."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Pareto, ShiftedExp, SingleForkPolicy
+from repro.runtime import HedgedServer, SimCluster, SpeculativeExecutor
+
+from .common import save_json
+
+
+def run():
+    rows = []
+    dist = ShiftedExp(1.0, 2.0)
+    n_tasks, seeds = 32, 60
+
+    def mean_stats(policy):
+        lats, costs = [], []
+        for seed in range(seeds):
+            c = SimCluster(3 * n_tasks, dist, seed=seed, slow_fraction=0.15, slow_factor=8.0)
+            rep = SpeculativeExecutor(c).run([lambda: 0] * n_tasks, policy)
+            lats.append(rep.latency)
+            costs.append(rep.cost)
+        return float(np.mean(lats)), float(np.mean(costs))
+
+    base_l, base_c = mean_stats(SingleForkPolicy(0.0, 0, True))
+    mr_l, mr_c = mean_stats(SingleForkPolicy(0.1, 1, True))  # MapReduce default
+    opt_l, opt_c = mean_stats(SingleForkPolicy(0.25, 2, False))
+    rows.append(
+        ("trainer_step_latency", 0.0,
+         f"baseline={base_l:.2f}s;mapreduce={mr_l:.2f}s;tuned={opt_l:.2f}s")
+    )
+    rows.append(
+        ("trainer_step_cost", 0.0,
+         f"baseline={base_c:.2f};mapreduce={mr_c:.2f};tuned={opt_c:.2f}")
+    )
+
+    # hedged serving p99
+    dist_srv = Pareto(1.8, 0.05)
+    hedged, plain = [], []
+    for seed in range(seeds):
+        s1 = HedgedServer(SimCluster(96, dist_srv, seed=seed), lambda r: r, adapt=False,
+                          policy=SingleForkPolicy(0.1, 2, False))
+        s2 = HedgedServer(SimCluster(96, dist_srv, seed=seed), lambda r: r, adapt=False,
+                          policy=SingleForkPolicy(0.0, 0, True))
+        _, st1 = s1.serve_batch(list(range(32)))
+        _, st2 = s2.serve_batch(list(range(32)))
+        hedged.append(st1.p99)
+        plain.append(st2.p99)
+    rows.append(
+        ("hedged_serving_p99", 0.0,
+         f"plain={np.mean(plain)*1e3:.1f}ms;hedged={np.mean(hedged)*1e3:.1f}ms")
+    )
+    save_json(
+        "runtime_bench",
+        dict(
+            trainer=dict(baseline=[base_l, base_c], mapreduce=[mr_l, mr_c], tuned=[opt_l, opt_c]),
+            serving=dict(plain_p99=float(np.mean(plain)), hedged_p99=float(np.mean(hedged))),
+        ),
+    )
+    return rows

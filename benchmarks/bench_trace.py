@@ -1,0 +1,57 @@
+"""Paper Figs. 7-10: trace histograms + bootstrap E[T]-E[C] trade-offs for
+the three (synthesized; see data/traces.py) cluster jobs, r in {1,2,3},
+p in [0, 0.5], keep and kill."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import BASELINE, SingleForkPolicy, estimate
+from repro.data import TRACE_JOBS, synthesize_trace
+
+from .common import save_json, time_us
+
+P_GRID = np.round(np.arange(0.02, 0.52, 0.04), 3)
+
+
+def run():
+    rows, artifact = [], {}
+    for job in TRACE_JOBS:
+        trace = synthesize_trace(job)
+        base = estimate(trace, BASELINE, m=400, key=jax.random.PRNGKey(0))
+        curves = {}
+        for r in (1, 2, 3):
+            for keep in (True, False):
+                pts = []
+                for p in P_GRID:
+                    est = estimate(
+                        trace, SingleForkPolicy(float(p), r, keep), m=400,
+                        key=jax.random.PRNGKey(1),
+                    )
+                    pts.append(dict(p=float(p), latency=est.latency, cost=est.cost))
+                curves[f"r{r}_{'keep' if keep else 'kill'}"] = pts
+        artifact[job] = {
+            "n_tasks": len(trace),
+            "histogram": np.histogram(trace, bins=20)[0].tolist(),
+            "baseline": dict(latency=base.latency, cost=base.cost),
+            "curves": curves,
+        }
+        # qualitative derived metrics (see EXPERIMENTS.md §Repro)
+        keep1 = curves["r1_keep"]
+        best_lat = min(keep1, key=lambda e: e["latency"])
+        lat_cut = 1.0 - best_lat["latency"] / base.latency
+        cheapest = min(keep1, key=lambda e: e["cost"])
+        cost_delta = cheapest["cost"] / base.cost - 1.0
+        us = time_us(
+            lambda: estimate(trace, SingleForkPolicy(0.1, 1, True), m=400).latency
+        )
+        rows.append(
+            (
+                f"trace_{job}",
+                us,
+                f"keep_r1_best_latency_cut={lat_cut:.0%};min_cost_delta={cost_delta:+.1%}",
+            )
+        )
+    save_json("trace_fig8_9_10", artifact)
+    return rows

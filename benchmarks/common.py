@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: timing + CSV/artifact emission."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def time_us(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (jax results blocked)."""
+    import jax
+
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows: list[tuple]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def save_json(name: str, obj) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{name}.json"
+    p.write_text(json.dumps(obj, indent=1, default=float))
+    return p

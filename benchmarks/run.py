@@ -1,0 +1,58 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+#   PYTHONPATH=src python -m benchmarks.run            # everything
+#   PYTHONPATH=src python -m benchmarks.run --only trace table1
+#
+# Artifacts (full curves/tables) land in benchmarks/results/*.json.
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    bench_fig3_fig5,
+    bench_fig4_fig6,
+    bench_kernels,
+    bench_roofline,
+    bench_runtime,
+    bench_scaling,
+    bench_table1,
+    bench_trace,
+)
+from .common import emit
+
+BENCHES = {
+    "fig3_fig5": bench_fig3_fig5,  # sim vs analytic latency (Figs. 3, 5)
+    "fig4_fig6": bench_fig4_fig6,  # E[T]/E[C]/trade-off sweeps (Figs. 4, 6)
+    "trace": bench_trace,  # bootstrap trade-offs on traces (Figs. 7-10)
+    "table1": bench_table1,  # policy optimization (Table 1)
+    "scaling": bench_scaling,  # Corollary 1 growth exponents
+    "kernels": bench_kernels,  # Pallas kernels + Algorithm 1 throughput
+    "runtime": bench_runtime,  # trainer/serving economics
+    "roofline": bench_roofline,  # dry-run roofline summary
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+    names = args.only or list(BENCHES)
+    print("name,us_per_call,derived")
+    failed = 0
+    for name in names:
+        t0 = time.time()
+        try:
+            rows = BENCHES[name].run()
+            emit(rows)
+        except Exception as e:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Regenerate the generated tables inside EXPERIMENTS.md from the dry-run
+artifacts.  Idempotent: replaces the <!-- MARKER --> blocks.
+
+    PYTHONPATH=src python -m benchmarks.update_experiments
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+from repro.launch import roofline
+
+ROOT = Path(__file__).resolve().parents[1]
+EXP = ROOT / "EXPERIMENTS.md"
+
+
+def dryrun_summary() -> str:
+    rows = []
+    for p in sorted(roofline.RESULTS_DIR.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("tag"):
+            continue
+        if rec["status"] == "SKIP":
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | SKIP | {rec['reason']} |"
+            )
+        elif rec["status"] == "OK":
+            fl = rec["cost"].get("flops", 0)
+            coll = sum(rec.get("collectives", {}).values())
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | OK "
+                f"| {rec['n_devices']} dev, {fl:.2e} FLOP/dev, {coll/1e9:.1f} GB coll/dev, "
+                f"compile {rec['compile_s']}s |"
+            )
+        else:
+            rows.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | FAIL | {rec.get('error','')[:80]} |")
+    hdr = "| arch | shape | mesh | status | detail |\n|---|---|---|---|---|"
+    return hdr + "\n" + "\n".join(rows)
+
+
+def inject(text: str, marker: str, content: str) -> str:
+    block = f"<!-- {marker} -->"
+    assert block in text, marker
+    # replace from marker to the next heading or next marker
+    pattern = re.compile(
+        re.escape(block) + r".*?(?=\n## |\n### |\n<!-- |\Z)", re.DOTALL
+    )
+    return pattern.sub(block + "\n\n" + content + "\n", text)
+
+
+def main():
+    text = EXP.read_text()
+    rows = roofline.load_all()
+    single = [r for r in rows if r["mesh"] == "single"]
+    multi = [r for r in rows if r["mesh"] == "multi"]
+    text = inject(text, "DRYRUN_TABLE", dryrun_summary())
+    text = inject(text, "ROOFLINE_TABLE_SINGLE", roofline.markdown_table(single))
+    text = inject(
+        text,
+        "ROOFLINE_TABLE_MULTI",
+        roofline.markdown_table(multi)
+        + "\n\n(multi-pod cells predate the alias-adjusted byte accounting; "
+        "their memory terms use raw cost-analysis bytes — conservative.)",
+    )
+    EXP.write_text(text)
+    print(f"updated {EXP} ({len(single)} single, {len(multi)} multi cells)")
+
+
+if __name__ == "__main__":
+    main()

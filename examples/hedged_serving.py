@@ -1,0 +1,73 @@
+"""Hedged decoding: serve batched generation requests with single-fork
+request hedging; the policy adapts online from measured latencies.
+
+    PYTHONPATH=src python examples/hedged_serving.py
+
+Real model decode (reduced qwen2 on CPU, jit-compiled once) + simulated
+per-replica server latency (Pareto tail).  Shows p50/p99 and cost vs the
+no-hedging baseline and the policy the controller converges to.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import Pareto, SingleForkPolicy
+from repro.models.lm import build_model
+from repro.runtime import HedgedServer, SimCluster
+
+PROMPT, STEPS = 12, 8
+
+cfg = get_reduced("qwen2-0.5b")
+model = build_model(cfg)
+params, _ = model.init(jax.random.PRNGKey(0))
+
+
+@jax.jit
+def generate(params, tokens):
+    """Greedy prefill + STEPS decode tokens, static shapes (one compile)."""
+    logits, cache = model.prefill(params, {"tokens": tokens})
+    cache = model.grow_cache(cache, PROMPT + STEPS)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    out = [tok]
+    for i in range(STEPS - 1):
+        logits, cache = model.decode_step(params, cache, tok, PROMPT + i)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, axis=1)
+
+
+def serve_request(prompt_tokens):
+    return np.asarray(generate(params, jnp.asarray(prompt_tokens)[None, :]))[0]
+
+
+latency_dist = Pareto(alpha=1.7, xm=0.040)  # 40 ms floor, heavy tail
+rng = np.random.default_rng(0)
+requests = [rng.integers(0, cfg.vocab, size=PROMPT) for _ in range(24)]
+
+print("batch     policy                        latency    p50     p99    cost")
+for label, server in (
+    (
+        "plain",
+        HedgedServer(
+            SimCluster(96, latency_dist, seed=7, slow_fraction=0.08, slow_factor=12.0),
+            serve_request, adapt=False, policy=SingleForkPolicy(0.0, 0, True),
+        ),
+    ),
+    (
+        "hedged",
+        HedgedServer(
+            SimCluster(96, latency_dist, seed=7, slow_fraction=0.08, slow_factor=12.0),
+            serve_request, adapt=True, policy=SingleForkPolicy(0.05, 1, True),
+        ),
+    ),
+):
+    for i in range(3):
+        outs, stats = server.serve_batch(requests)
+        print(
+            f"{label}-{i}  {stats.policy:28s} {stats.latency:7.3f} {stats.p50:7.3f} "
+            f"{stats.p99:7.3f} {stats.cost:7.3f}"
+        )
+    assert all(len(o) == STEPS for o in outs)

@@ -1,0 +1,28 @@
+"""End-to-end driver: train a ~100M-class LM for a few hundred steps under
+the straggler-aware runtime (speculative gradient-shard replication, online
+policy adaptation, failures, checkpoints).
+
+    PYTHONPATH=src python examples/straggler_training.py
+
+This is a thin preset over ``repro.launch.train``; see that module for the
+full CLI (any of the 10 assigned --arch values works).
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main(
+        [
+            "--arch", "qwen2-0.5b",
+            "--steps", "200",
+            "--batch", "8",
+            "--seq", "128",
+            "--n-tasks", "8",
+            "--dist", "pareto",
+            "--checkpoint-dir", "/tmp/repro_ckpt",
+            "--log-every", "20",
+        ]
+        + sys.argv[1:]
+    )

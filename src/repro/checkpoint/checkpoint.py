@@ -1,0 +1,124 @@
+"""Atomic, sharding-aware checkpointing.
+
+Layout:  <dir>/step_<N>/manifest.json + arrays.npz
+Writes go to a tmp dir and are renamed into place (atomic on POSIX), so a
+crash mid-save never corrupts the latest checkpoint — the restart path
+(`latest_step`) only ever sees fully-renamed directories.
+
+Restore targets a `like` pytree: values are loaded by flattened key and
+device_put with `like`'s shardings when present (multi-host restore puts
+only the local shards; here that's a single CPU device).  Retention keeps
+the newest `keep` checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+# npz cannot store ml_dtypes (bfloat16, float8); round-trip them as raw bits
+_BITCAST = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8, "float8_e5m2": np.uint8}
+
+
+def _to_storage(arr: np.ndarray) -> np.ndarray:
+    view = _BITCAST.get(str(arr.dtype))
+    return arr.view(view) if view is not None else arr
+
+
+def _from_storage(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _BITCAST:
+        import ml_dtypes
+
+        return arr.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+    return arr
+
+
+def _flatten(tree: PyTree) -> dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def save(directory: str | os.PathLike, state: PyTree, step: int, keep: int = 3) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step}"
+    tmp = directory / f".tmp_step_{step}_{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    flat = _flatten(state)
+    arrays = {}
+    manifest = {"step": step, "time": time.time(), "keys": [], "dtypes": {}, "shapes": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(leaf)
+        manifest["keys"].append(key)
+        manifest["dtypes"][key] = str(arr.dtype)
+        manifest["shapes"][key] = list(arr.shape)
+        arrays[key] = _to_storage(arr)
+    np.savez(tmp / "arrays.npz", **arrays)
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic publish
+
+    # retention
+    steps = sorted(all_steps(directory))
+    for old in steps[:-keep]:
+        shutil.rmtree(directory / f"step_{old}", ignore_errors=True)
+    return final
+
+
+def all_steps(directory: str | os.PathLike) -> list[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return []
+    out = []
+    for p in directory.iterdir():
+        m = _STEP_RE.match(p.name)
+        if m and (p / "manifest.json").exists():
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(directory: str | os.PathLike) -> int | None:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str | os.PathLike, like: PyTree, step: int | None = None) -> PyTree:
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = directory / f"step_{step}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves, treedef = flat_like
+    out = []
+    for key_path, leaf in leaves:
+        key = jax.tree_util.keystr(key_path)
+        if key not in manifest["dtypes"]:
+            raise KeyError(f"checkpoint {path} missing key {key}")
+        arr = _from_storage(data[key], manifest["dtypes"][key])
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None and hasattr(leaf, "shape"):
+            out.append(jax.device_put(arr, sharding))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(jax.tree.structure(like), out)

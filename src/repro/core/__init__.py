@@ -1,0 +1,37 @@
+# The paper's primary contribution: straggler-replication policy analysis,
+# simulation, bootstrap estimation (Algorithm 1) and policy optimization.
+from .distributions import (  # noqa: F401
+    Distribution,
+    Empirical,
+    Pareto,
+    ShiftedExp,
+    Uniform,
+    Weibull,
+    upper_end_point,
+)
+from .policy import BASELINE, MultiForkPolicy, SingleForkPolicy, num_stragglers  # noqa: F401
+from .residual import ResidualDistribution  # noqa: F401
+from .analysis import (  # noqa: F401
+    LatencyCost,
+    baseline_cost,
+    baseline_latency,
+    corollary1_exponent,
+    lemma1_prefer_kill,
+    theorem1,
+    theorem2_cost,
+    theorem2_latency,
+    theorem3_cost,
+    theorem3_latency,
+)
+from .simulate import SimResult, simulate, simulate_multifork  # noqa: F401
+from .bootstrap import BootstrapEstimate, estimate, residual_tail_grid  # noqa: F401
+from .optimize import (  # noqa: F401
+    PolicyEvaluation,
+    analytic_evaluator,
+    bootstrap_evaluator,
+    optimize_cost_sensitive,
+    optimize_latency_sensitive,
+    tradeoff_curve,
+)
+from .adaptive import OnlinePolicyController  # noqa: F401
+from . import evt  # noqa: F401

@@ -1,0 +1,210 @@
+"""Execution-time distributions (paper §2.2, §3.2).
+
+Every distribution exposes the quintet the paper's analysis needs:
+
+  tail(x)      = Pr(X > x)                      (F̄_X)
+  cdf(x)       = Pr(X <= x)
+  quantile(u)  = F_X^{-1}(u)                    (inverse c.d.f.)
+  mean()       = E[X]
+  sample(key, shape)                            (inverse-transform sampling)
+
+All math is jnp so the whole analysis/bootstrap stack jits and vmaps.
+Parameters are stored as Python floats (static under jit closures).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Distribution",
+    "ShiftedExp",
+    "Pareto",
+    "Uniform",
+    "Weibull",
+    "Empirical",
+    "upper_end_point",
+]
+
+
+class Distribution:
+    """Base class; subclasses implement tail/quantile analytically."""
+
+    def tail(self, x):
+        raise NotImplementedError
+
+    def cdf(self, x):
+        return 1.0 - self.tail(x)
+
+    def quantile(self, u):
+        raise NotImplementedError
+
+    def mean(self):
+        raise NotImplementedError
+
+    def support(self) -> Tuple[float, float]:
+        """(lower, upper) end points; upper may be inf."""
+        raise NotImplementedError
+
+    def sample(self, key, shape=()):
+        u = jax.random.uniform(key, shape)
+        return self.quantile(u)
+
+    # -- numeric helpers shared by subclasses ------------------------------
+    def mean_numeric(self, num: int = 4096):
+        """E[X] = lower + ∫ tail(x) dx over [lower, hi] for nonneg X."""
+        lo, hi = self.support()
+        hi = jnp.where(jnp.isinf(hi), self._finite_upper(), hi)
+        xs = jnp.linspace(lo, hi, num)
+        return lo + jnp.trapezoid(self.tail(xs), xs)
+
+    def _finite_upper(self, eps: float = 1e-7):
+        return self.quantile(1.0 - eps)
+
+
+def upper_end_point(dist: Distribution) -> float:
+    """ω(F_X) = sup{x : F_X(x) < 1}  (paper eq. (1))."""
+    return dist.support()[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShiftedExp(Distribution):
+    """ShiftedExp(Δ, μ): F̄(x) = exp(-μ(x-Δ)) for x >= Δ (paper eq. (9)).
+
+    Exponential tail ⇒ DA(Λ) (Gumbel domain). 'New-longer-than-used' for
+    Δ > 0, so π_keep is always preferred (paper §3.2.1).
+    """
+
+    delta: float
+    mu: float
+
+    def tail(self, x):
+        x = jnp.asarray(x, jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
+        return jnp.where(x >= self.delta, jnp.exp(-self.mu * (x - self.delta)), 1.0)
+
+    def quantile(self, u):
+        u = jnp.clip(u, 0.0, 1.0 - 1e-12)
+        return self.delta - jnp.log1p(-u) / self.mu
+
+    def mean(self):
+        return self.delta + 1.0 / self.mu
+
+    def support(self):
+        return (self.delta, float("inf"))
+
+
+@dataclasses.dataclass(frozen=True)
+class Pareto(Distribution):
+    """Pareto(α, x_m): F̄(x) = (x_m/x)^α for x >= x_m (paper eq. (13)).
+
+    Polynomially decaying (heavy) tail ⇒ DA(Φ_α) (Fréchet domain).
+    """
+
+    alpha: float
+    xm: float
+
+    def tail(self, x):
+        x = jnp.asarray(x)
+        safe = jnp.maximum(x, self.xm)
+        return jnp.where(x >= self.xm, (self.xm / safe) ** self.alpha, 1.0)
+
+    def quantile(self, u):
+        u = jnp.clip(u, 0.0, 1.0 - 1e-12)
+        return self.xm * (1.0 - u) ** (-1.0 / self.alpha)
+
+    def mean(self):
+        if self.alpha <= 1.0:
+            return float("inf")
+        return self.alpha * self.xm / (self.alpha - 1.0)
+
+    def support(self):
+        return (self.xm, float("inf"))
+
+
+@dataclasses.dataclass(frozen=True)
+class Uniform(Distribution):
+    """Uniform(a, b): finite upper end point ⇒ DA(Ψ_1) (reversed-Weibull)."""
+
+    a: float
+    b: float
+
+    def tail(self, x):
+        x = jnp.asarray(x)
+        return jnp.clip((self.b - x) / (self.b - self.a), 0.0, 1.0)
+
+    def quantile(self, u):
+        return self.a + (self.b - self.a) * jnp.clip(u, 0.0, 1.0)
+
+    def mean(self):
+        return 0.5 * (self.a + self.b)
+
+    def support(self):
+        return (self.a, self.b)
+
+
+@dataclasses.dataclass(frozen=True)
+class Weibull(Distribution):
+    """Weibull(k, lam): F̄(x) = exp(-(x/λ)^k); DA(Λ) for any k > 0."""
+
+    k: float
+    lam: float
+
+    def tail(self, x):
+        x = jnp.asarray(x)
+        return jnp.exp(-jnp.maximum(x, 0.0) ** self.k / self.lam**self.k)
+
+    def quantile(self, u):
+        u = jnp.clip(u, 0.0, 1.0 - 1e-12)
+        return self.lam * (-jnp.log1p(-u)) ** (1.0 / self.k)
+
+    def mean(self):
+        import math
+
+        return self.lam * math.gamma(1.0 + 1.0 / self.k)
+
+    def support(self):
+        return (0.0, float("inf"))
+
+
+class Empirical(Distribution):
+    """Empirical distribution F̂_X from n execution-time samples (paper §4).
+
+    tail/cdf are the right-continuous step functions of the sample; quantile
+    is the standard inverse (type-1). Sampling = bootstrap resampling (draw
+    uniformly among the samples), exactly what Algorithm 1 prescribes.
+    """
+
+    def __init__(self, samples):
+        samples = jnp.asarray(samples)
+        if samples.ndim != 1:
+            raise ValueError("Empirical expects a 1-D sample vector")
+        self.sorted = jnp.sort(samples)
+        self.n = int(samples.shape[0])
+
+    def tail(self, x):
+        # Pr(X > x) = (# samples strictly greater than x) / n
+        idx = jnp.searchsorted(self.sorted, jnp.asarray(x), side="right")
+        return 1.0 - idx / self.n
+
+    def cdf(self, x):
+        idx = jnp.searchsorted(self.sorted, jnp.asarray(x), side="right")
+        return idx / self.n
+
+    def quantile(self, u):
+        u = jnp.clip(jnp.asarray(u), 0.0, 1.0)
+        idx = jnp.clip(jnp.ceil(u * self.n).astype(jnp.int32) - 1, 0, self.n - 1)
+        return self.sorted[idx]
+
+    def mean(self):
+        return jnp.mean(self.sorted)
+
+    def support(self):
+        return (float(self.sorted[0]), float(self.sorted[-1]))
+
+    def sample(self, key, shape=()):
+        idx = jax.random.randint(key, shape, 0, self.n)
+        return self.sorted[idx]

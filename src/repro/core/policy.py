@@ -1,0 +1,86 @@
+"""Scheduling policies (paper Definition 1).
+
+A single-fork policy π(p, r) launches all n tasks at t=0, waits for (1-p)n
+to finish, then for each of the pn stragglers either
+
+  * π_keep(p, r): keeps the original copy and launches r new replicas, or
+  * π_kill(p, r): kills the original and launches r+1 new replicas.
+
+Either way r+1 replicas run after the fork point; first finisher wins and
+siblings are cancelled.  BASELINE is π(p=0, ·) — launch n, wait for all.
+
+`MultiForkPolicy` generalizes to several fork points ([24, §6.4]); the
+closed-form analysis in `analysis.py` covers single-fork only, but the
+Monte-Carlo simulator and the runtime executor accept multi-fork too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+__all__ = ["SingleForkPolicy", "MultiForkPolicy", "BASELINE", "num_stragglers"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SingleForkPolicy:
+    p: float  # fraction of tasks declared stragglers (fork at (1-p)n done)
+    r: int  # new replicas per straggler
+    keep: bool = True  # keep the original copy (π_keep) or kill it (π_kill)
+
+    def __post_init__(self):
+        if not 0.0 <= self.p < 1.0:
+            raise ValueError(f"p must be in [0, 1), got {self.p}")
+        if self.r < 0:
+            raise ValueError(f"r must be >= 0, got {self.r}")
+        if not self.keep and self.r == 0 and self.p > 0:
+            # π_kill(p, 0) relaunches one fresh copy; legal, just noting that
+            # π_keep(p, 0) is the baseline in disguise.
+            pass
+
+    @property
+    def is_baseline(self) -> bool:
+        return self.p == 0.0 or (self.keep and self.r == 0)
+
+    @property
+    def replicas_after_fork(self) -> int:
+        """Total copies of a straggling task running after the fork (= r+1)."""
+        return self.r + 1
+
+    def label(self) -> str:
+        if self.is_baseline:
+            return "baseline"
+        mode = "keep" if self.keep else "kill"
+        return f"pi_{mode}(p={self.p:g}, r={self.r})"
+
+
+BASELINE = SingleForkPolicy(p=0.0, r=0, keep=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiForkPolicy:
+    """Fork at several completion quantiles.  stages[i] = (p_i, r_i, keep_i):
+    when (1 - p_i) n tasks are done, each still-running task gets r_i extra
+    replicas (keep_i=False additionally kills currently running copies).
+    p must be strictly decreasing (later forks act on fewer tasks)."""
+
+    stages: Tuple[Tuple[float, int, bool], ...]
+
+    def __post_init__(self):
+        ps = [s[0] for s in self.stages]
+        if any(not 0 < p < 1 for p in ps):
+            raise ValueError("every stage p must be in (0,1)")
+        if any(a <= b for a, b in zip(ps, ps[1:])):
+            raise ValueError("stage p's must be strictly decreasing")
+
+    @staticmethod
+    def from_single(policy: SingleForkPolicy) -> "MultiForkPolicy":
+        return MultiForkPolicy(((policy.p, policy.r, policy.keep),))
+
+
+def num_stragglers(n: int, p: float) -> int:
+    """pn with explicit rounding (paper assumes pn integer; we round half up
+    and keep at least 1 straggler for any p > 0 so π(p>0) always forks)."""
+    if p <= 0.0:
+        return 0
+    return max(1, min(n - 1, int(round(p * n))))

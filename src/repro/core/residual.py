@@ -1,0 +1,83 @@
+"""Residual execution time Y of a straggling task after the fork point
+(paper Theorem 1, eq. (7)).
+
+    F̄_Y(y) = F̄_X(y)^{r+1}                                   for π_kill(p, r)
+    F̄_Y(y) = (1/p) · F̄_X(y)^r · F̄_X(y + F_X^{-1}(1-p))      for π_keep(p, r)
+
+Works for any `Distribution` (analytic or empirical).  Quantiles are
+obtained by monotone bisection on the tail, which keeps the whole object
+jit/vmap-friendly with static iteration counts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .distributions import Distribution
+from .policy import SingleForkPolicy
+
+__all__ = ["ResidualDistribution"]
+
+_BISECT_ITERS = 60
+_GROW_ITERS = 60
+
+
+class ResidualDistribution(Distribution):
+    def __init__(self, base: Distribution, policy: SingleForkPolicy):
+        if policy.p <= 0.0:
+            raise ValueError("residual distribution needs p > 0 (a fork must occur)")
+        self.base = base
+        self.policy = policy
+        # T^(1) → F_X^{-1}(1-p) as n→∞ (Central Value Theorem, Thm 4)
+        self.fork_time = base.quantile(1.0 - policy.p)
+
+    # ------------------------------------------------------------------ tail
+    def tail(self, y):
+        y = jnp.asarray(y)
+        r, p = self.policy.r, self.policy.p
+        base_tail = jnp.clip(self.base.tail(y), 0.0, 1.0)
+        if self.policy.keep:
+            cond = jnp.clip(self.base.tail(y + self.fork_time) / p, 0.0, 1.0)
+            t = base_tail**r * cond
+        else:
+            t = base_tail ** (r + 1)
+        return jnp.where(y <= 0.0, 1.0, jnp.clip(t, 0.0, 1.0))
+
+    # -------------------------------------------------------------- quantile
+    def quantile(self, u):
+        """F_Y^{-1}(u) by bisection on the (monotone, right-continuous) cdf."""
+        u = jnp.clip(jnp.asarray(u, jnp.float32), 0.0, 1.0 - 1e-7)
+        target_tail = 1.0 - u
+
+        # grow an upper bracket until tail(hi) <= min target
+        def grow(_, hi):
+            need = jnp.any(self.tail(hi) > target_tail)
+            return jnp.where(need, hi * 2.0, hi)
+
+        hi0 = jnp.maximum(jnp.asarray(1.0, jnp.float32), jnp.float32(self.fork_time))
+        hi = jax.lax.fori_loop(0, _GROW_ITERS, grow, jnp.broadcast_to(hi0, u.shape))
+        lo = jnp.zeros_like(hi)
+
+        def bisect(_, carry):
+            lo, hi = carry
+            mid = 0.5 * (lo + hi)
+            too_low = self.tail(mid) > target_tail  # mid below the quantile
+            return jnp.where(too_low, mid, lo), jnp.where(too_low, hi, mid)
+
+        lo, hi = jax.lax.fori_loop(0, _BISECT_ITERS, bisect, (lo, hi))
+        return 0.5 * (lo + hi)
+
+    # ------------------------------------------------------------------ mean
+    def mean(self, num: int = 8192):
+        """E[Y] = ∫_0^∞ F̄_Y(y) dy (Y >= 0), integrated to a far quantile."""
+        hi = self.quantile(jnp.asarray(1.0 - 1e-6))
+        ys = jnp.linspace(0.0, hi, num)
+        return jnp.trapezoid(self.tail(ys), ys)
+
+    def support(self):
+        return (0.0, self.base.support()[1])
+
+    def sample(self, key, shape=()):
+        u = jax.random.uniform(key, shape)
+        return self.quantile(u)

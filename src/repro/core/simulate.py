@@ -1,0 +1,180 @@
+"""Vectorized Monte-Carlo simulation of single-/multi-fork job execution.
+
+This is the *exact finite-n* ground truth (the points in the paper's
+Figs. 3 and 5): for each trial, draw the n original execution times, apply
+the fork semantics of Definition 1, and read off (T, C) per Definitions
+1–2.  Everything is jnp; trials are vmapped, so m=10^4 trials of n=10^3
+tasks is a single fused device program.
+
+Semantics per trial (policy π(p, r), s = pn stragglers):
+
+  T1    = s-th largest original time  (= (1-p)n-th order statistic)
+  C1/n  = Σ_{i<=k} X_(i) + s·T1              (k = n - s finished + stragglers so far)
+  Y_j   = min(X_(k+j) - T1, fresh_1..r)       π_keep  (original keeps running)
+        = min(fresh_1..r+1)                   π_kill
+  T     = T1 + max_j Y_j
+  C·n   = C1 + (r+1)·Σ_j Y_j     (each straggler has r+1 copies running
+                                  until its first finisher, per Fig. 2)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .distributions import Distribution
+from .policy import MultiForkPolicy, SingleForkPolicy, num_stragglers
+
+__all__ = ["SimResult", "simulate", "simulate_multifork"]
+
+
+@dataclasses.dataclass
+class SimResult:
+    latency: jnp.ndarray  # (m,) per-trial T
+    cost: jnp.ndarray  # (m,) per-trial C
+
+    @property
+    def mean_latency(self) -> float:
+        return float(jnp.mean(self.latency))
+
+    @property
+    def mean_cost(self) -> float:
+        return float(jnp.mean(self.cost))
+
+    @property
+    def latency_std_err(self) -> float:
+        m = self.latency.shape[0]
+        return float(jnp.std(self.latency) / jnp.sqrt(m))
+
+    @property
+    def cost_std_err(self) -> float:
+        m = self.cost.shape[0]
+        return float(jnp.std(self.cost) / jnp.sqrt(m))
+
+
+def _single_trial(key, dist: Distribution, n: int, s: int, r: int, keep: bool):
+    kx, ky = jax.random.split(key)
+    x = dist.sample(kx, (n,))
+    x_sorted = jnp.sort(x)
+    k = n - s
+    if s == 0:
+        return x_sorted[-1], jnp.sum(x_sorted) / n
+
+    t1 = x_sorted[k - 1]
+    finished_cost = jnp.sum(jnp.where(jnp.arange(n) < k, x_sorted, 0.0))
+    c1 = finished_cost + s * t1
+
+    stragglers = x_sorted[k:]  # the s largest original times (> t1)
+    fresh = dist.sample(ky, (s, r + 1))
+    if keep:
+        remaining = stragglers - t1
+        if r > 0:
+            y = jnp.minimum(remaining, jnp.min(fresh[:, :r], axis=1))
+        else:
+            y = remaining
+    else:
+        y = jnp.min(fresh, axis=1)
+
+    latency = t1 + jnp.max(y)
+    cost = (c1 + (r + 1) * jnp.sum(y)) / n
+    return latency, cost
+
+
+@partial(jax.jit, static_argnames=("dist", "policy", "n", "m"))
+def _simulate_jit(key, dist, policy, n, m):
+    s = num_stragglers(n, policy.p)
+    keys = jax.random.split(key, m)
+    lat, cost = jax.vmap(lambda k: _single_trial(k, dist, n, s, policy.r, policy.keep))(keys)
+    return lat, cost
+
+
+def simulate(
+    dist: Distribution,
+    policy: SingleForkPolicy,
+    n: int,
+    m: int = 1000,
+    key=None,
+) -> SimResult:
+    """m Monte-Carlo trials of an n-task job under `policy`."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    lat, cost = _simulate_jit(key, dist, policy, n, m)
+    return SimResult(latency=lat, cost=cost)
+
+
+# --------------------------------------------------------------------------
+# multi-fork generalization ([24, §6.4]) — simulation only
+# --------------------------------------------------------------------------
+
+
+def simulate_multifork(
+    dist: Distribution,
+    policy: MultiForkPolicy,
+    n: int,
+    m: int = 1000,
+    key=None,
+) -> SimResult:
+    """Event-accurate multi-fork simulation.
+
+    Tracked per task: earliest possible finish time given copies launched so
+    far.  At each stage i (triggered when (1-p_i)n tasks are done), every
+    unfinished task gets r_i fresh copies (kill_i additionally discards the
+    old copies' remaining work).  Cost accounting mirrors Definition 2.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    stages = policy.stages
+
+    def trial(key):
+        keys = jax.random.split(key, len(stages) + 1)
+        x = dist.sample(keys[0], (n,))
+        finish = x  # current earliest finish time per task
+        launch_cost_terms = []  # (start_time, count) pending per task
+        # originals: started at 0, will run until min(finish, kill_time)
+        run_start = jnp.zeros((n,))
+        cost = jnp.zeros(())
+        # Active copy bookkeeping: we fold each cohort's cost in when we know
+        # the task's final finish time; with first-copy-wins all active
+        # copies of task i stop at T_i.
+        cohorts = [(jnp.zeros((n,)), jnp.ones((n,)))]  # (start_time, n_copies)
+
+        for i, (p_i, r_i, keep_i) in enumerate(stages):
+            s_i = num_stragglers(n, p_i)
+            k_i = n - s_i
+            t_fork = jnp.sort(finish)[k_i - 1]
+            unfinished = finish > t_fork
+            n_fresh = r_i if keep_i else r_i + 1  # kill relaunches r+1 copies
+            fresh = dist.sample(keys[i + 1], (n, max(n_fresh, 1)))
+            fresh_finish = t_fork + jnp.min(fresh[:, : max(n_fresh, 1)], axis=1)
+            if not keep_i:
+                # discard old copies for unfinished tasks: their cohorts stop
+                # accruing at t_fork
+                new_cohorts = []
+                for start, count in cohorts:
+                    stop = jnp.where(unfinished, t_fork, jnp.inf)  # inf = runs to finish
+                    cost = cost + jnp.sum(
+                        jnp.where(unfinished, count * jnp.maximum(t_fork - start, 0.0), 0.0)
+                    )
+                    # finished tasks keep their cohort (settled at the end)
+                    new_cohorts.append((start, jnp.where(unfinished, 0.0, count)))
+                cohorts = new_cohorts
+                finish = jnp.where(unfinished, fresh_finish, finish)
+                extra = jnp.where(unfinished, float(r_i + 1), 0.0)
+                cohorts.append((jnp.full((n,), t_fork), extra))
+            else:
+                if r_i > 0:
+                    finish = jnp.where(unfinished, jnp.minimum(finish, fresh_finish), finish)
+                    cohorts.append(
+                        (jnp.full((n,), t_fork), jnp.where(unfinished, float(r_i), 0.0))
+                    )
+        # settle all remaining cohorts at each task's final finish time
+        for start, count in cohorts:
+            cost = cost + jnp.sum(count * jnp.maximum(finish - start, 0.0))
+        return jnp.max(finish), cost / n
+
+    keys = jax.random.split(key, m)
+    lat, cost = jax.vmap(trial)(keys)
+    return SimResult(latency=lat, cost=cost)

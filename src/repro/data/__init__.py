@@ -1,0 +1,2 @@
+from .pipeline import SyntheticTokenPipeline, make_batch_specs  # noqa: F401
+from .traces import TRACE_JOBS, load_trace, synthesize_trace  # noqa: F401

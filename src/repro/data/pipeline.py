@@ -1,0 +1,77 @@
+"""Deterministic synthetic token pipeline.
+
+Generates reproducible (tokens, labels) batches keyed by (seed, step) —
+every DP host can materialize exactly its shard without coordination, which
+is what makes speculative re-execution of a gradient shard value-identical
+on a different host: the batch shard is a pure function of (seed, step,
+shard_index), not of the host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import ModelConfig
+
+
+@dataclasses.dataclass
+class SyntheticTokenPipeline:
+    config: ModelConfig
+    batch_size: int
+    seq_len: int
+    seed: int = 0
+
+    def batch(self, step: int) -> dict:
+        """Global batch for `step` (host-independent, reproducible)."""
+        rng = np.random.default_rng((self.seed, step))
+        cfg = self.config
+        text = self.seq_len - (cfg.vision_patches if cfg.family == "vlm" else 0)
+        # zipfian-ish token distribution so losses move like real text
+        ranks = rng.zipf(1.3, size=(self.batch_size, text + 1))
+        tokens_all = np.clip(ranks, 1, cfg.vocab - 1).astype(np.int32)
+        batch = {
+            "tokens": jnp.asarray(tokens_all[:, :-1]),
+            "labels": jnp.asarray(tokens_all[:, 1:]),
+        }
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jnp.asarray(
+                rng.standard_normal((self.batch_size, cfg.vision_patches, cfg.d_model)),
+                jnp.bfloat16,
+            )
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = jnp.asarray(
+                rng.standard_normal((self.batch_size, cfg.enc_positions, cfg.d_model)),
+                jnp.bfloat16,
+            )
+        return batch
+
+    def shard(self, step: int, index: int, n_shards: int) -> dict:
+        """Shard `index` of the global batch — computable by any host."""
+        full = self.batch(step)
+        size = self.batch_size // n_shards
+
+        def cut(x):
+            return x[index * size : (index + 1) * size]
+
+        return {k: cut(v) for k, v in full.items()}
+
+
+def make_batch_specs(cfg: ModelConfig, batch_size: int, seq_len: int) -> dict:
+    text = seq_len - (cfg.vision_patches if cfg.family == "vlm" else 0)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((batch_size, text), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch_size, text), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (batch_size, cfg.vision_patches, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "encdec":
+        specs["enc_embeds"] = jax.ShapeDtypeStruct(
+            (batch_size, cfg.enc_positions, cfg.d_model), jnp.bfloat16
+        )
+    return specs

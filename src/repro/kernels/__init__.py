@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the framework's compute hot-spots (attention,
+# Mamba2 SSD) plus the paper's own bootstrap hot loop (residual sampler).
+# Each kernel ships with ops.py (jit'd wrapper) and ref.py (pure-jnp oracle).
+import jax
+
+#: kernels run in interpret mode everywhere except real TPU backends
+INTERPRET = jax.default_backend() != "tpu"

@@ -1,0 +1,10 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On non-TPU backends the kernels execute in interpret mode (the kernel body
+runs as traced jnp on CPU), which is how this container validates them; on
+TPU they compile through Mosaic.
+"""
+
+from .flash_attention import flash_attention  # noqa: F401
+from .residual_sampler import residual_sample  # noqa: F401
+from .ssd_scan import ssd_scan  # noqa: F401

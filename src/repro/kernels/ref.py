@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0**30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q,k,v: (B,S,H,D), H already GQA-expanded.  fp32 softmax."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / (D**0.5)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None]
+        ki = jnp.arange(Sk)[None, :]
+        s = jnp.where(ki <= qi, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C, D, *, chunk: int = 128):
+    """Delegates to the model-layer chunked SSD (itself validated against a
+    step-by-step recurrence in tests)."""
+    from repro.models.ssm import ssd_chunked
+
+    return ssd_chunked(x, dt, A, B, C, D, chunk)
+
+
+def ssd_recurrence_ref(x, dt, A, B, C, D):
+    """O(S) literal recurrence — the ground truth for both chunked paths.
+    x: (Bt,S,H,P)  dt: (Bt,S,H)  A,D: (H,)  B,C: (Bt,S,G,N)."""
+    Bt, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf * A[None, None, :])  # (Bt,S,H)
+
+    def step(h, t):
+        ht = h * a[:, t][..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtf[:, t], xf[:, t], Bh[:, t]
+        )
+        yt = jnp.einsum("bhn,bhpn->bhp", Ch[:, t], ht)
+        return ht, yt
+
+    h0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+    hT, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1) + xf * D[None, None, :, None]
+    return y.astype(x.dtype), hT
+
+
+def residual_sample_ref(u, xs):
+    """u: (m,s,k) uniforms, xs: (n,) sorted.  Empirical inverse transform,
+    min over replicas, then per-trial (max, sum)."""
+    n = xs.shape[0]
+    idx = jnp.clip(jnp.ceil(u * n).astype(jnp.int32) - 1, 0, n - 1)
+    y = jnp.min(xs[idx], axis=-1)
+    return jnp.max(y, axis=-1), jnp.sum(y, axis=-1)

@@ -1,0 +1,72 @@
+"""Residual-replica sampling Pallas kernel — the paper's own hot loop.
+
+Algorithm 1 draws, for each of m bootstrap replicates, pn residual times
+Y = min over (r+1) replicas of fresh draws from the empirical F̂_X, then
+reduces max_j Y_j (the latency tail term) and sum_j Y_j (the cost term).
+Empirical inverse-transform sampling is an integer gather:
+F̂_X^{-1}(u) = xs[ceil(u·n)-1] with xs the sorted trace.
+
+The kernel fuses gather + min-over-replicas + max/sum reductions per trial
+block: uniforms stream through VMEM, the sorted trace stays VMEM-resident
+(one tile, n <= a few thousand in every trace the paper uses).
+
+Used by the π_kill path of the vectorized estimator (eq. (7):
+F̄_Y = F̄_X^{r+1} — i.e. Y is exactly a min of r+1 fresh draws); the
+general path (π_keep) goes through the tabulated-cdf route in
+`repro.core.bootstrap`.  Oracle: kernels/ref.py::residual_sample_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, xs_ref, mx_ref, sm_ref, *, n):
+    u = u_ref[...]  # (block_m, s, k)
+    xs = xs_ref[...]  # (n,)
+    idx = jnp.clip(jnp.ceil(u * n).astype(jnp.int32) - 1, 0, n - 1)
+    draws = xs[idx]  # gather: (block_m, s, k)
+    y = jnp.min(draws, axis=-1)  # min over r+1 replicas
+    mx_ref[...] = jnp.max(y, axis=-1)  # (block_m,)
+    sm_ref[...] = jnp.sum(y, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def residual_sample(u, xs, *, block_m: int = 8, interpret: bool | None = None):
+    """u: (m, s, k) uniforms; xs: (n,) sorted trace.
+    Returns (max_y: (m,), sum_y: (m,))."""
+    if interpret is None:
+        from repro.kernels import INTERPRET
+
+        interpret = INTERPRET
+    m, s, k = u.shape
+    n = xs.shape[0]
+    pad_m = (-m) % block_m
+    if pad_m:
+        u = jnp.pad(u, ((0, pad_m), (0, 0), (0, 0)))
+    mp = u.shape[0]
+    grid = (mp // block_m,)
+    kernel = functools.partial(_kernel, n=n)
+    mx, sm = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, s, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp,), xs.dtype),
+            jax.ShapeDtypeStruct((mp,), xs.dtype),
+        ],
+        interpret=interpret,
+    )(u, xs)
+    return mx[:m], sm[:m]

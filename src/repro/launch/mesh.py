@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Built by FUNCTIONS (never at module import) so importing this module does
+not touch jax device state — the dry-run must set XLA_FLAGS before any jax
+initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (roofline; see EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = False):
+    """Small mesh for CI-scale sharding tests (needs 8 host devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch is sharded over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

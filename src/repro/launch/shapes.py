@@ -1,0 +1,83 @@
+"""Assigned input shapes and per-(arch x shape) applicability.
+
+  train_4k     seq 4096,   global_batch 256   (training)
+  prefill_32k  seq 32768,  global_batch 32    (inference prefill)
+  decode_32k   seq 32768,  global_batch 128   (one token, 32k KV cache)
+  long_500k    seq 524288, global_batch 1     (long-context decode;
+               SSM/hybrid archs only — full-attention archs skip, see
+               DESIGN.md §4)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import ModelConfig, build_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+SHAPE_NAMES = tuple(SHAPES)
+
+
+def applicability(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped)."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, "long_500k requires sub-quadratic attention (SSM/hybrid only)"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill -> batch dict; decode -> (cache, tokens, position) where
+    the cache comes from eval_shape over prefill (no allocation).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = {}
+        text = S - cfg.vision_patches if cfg.family == "vlm" else S
+        batch["tokens"] = _sds((B, text), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, text), jnp.int32)
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _sds((B, cfg.vision_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = _sds((B, cfg.enc_positions, cfg.d_model), jnp.bfloat16)
+        return batch
+
+    # decode: cache shapes from an abstract prefill at full cache length
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), abstract=True)
+    text = S - cfg.vision_patches if cfg.family == "vlm" else S
+    pre_batch = {"tokens": _sds((B, text), jnp.int32)}
+    if cfg.family == "vlm":
+        pre_batch["vision_embeds"] = _sds((B, cfg.vision_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        pre_batch["enc_embeds"] = _sds((B, cfg.enc_positions, cfg.d_model), jnp.bfloat16)
+    _, cache = jax.eval_shape(model.prefill, params, pre_batch)
+    return {
+        "cache": cache,
+        "tokens": _sds((B,), jnp.int32),
+        "position": _sds((), jnp.int32),
+    }

@@ -1,0 +1,95 @@
+"""Logical-axis -> mesh resolution with divisibility fallback.
+
+Params are declared with logical axes ('fsdp', 'model', 'layers', None) by
+`repro.models.common.Tape`; activations/caches use ('batch', 'heads', ...).
+A dim is sharded only if its size divides the product of the target mesh
+axes — otherwise it silently falls back to replication (this is how e.g.
+gemma's 8 query heads survive a 16-way model axis: the flattened q_dim
+2048 shards instead, and the head dim stays replicated).
+
+Two rule sets:
+  * TRAIN: FSDP ('fsdp' -> all batch axes) + TP ('model').
+  * SERVE_STATIONARY: weights stationary — 'fsdp' dims replicated so decode
+    never regathers weights (the §Perf alternative for decode cells; the
+    baseline serve path reuses TRAIN rules, which is exactly what makes it
+    collective-bound — see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def rules_train(mesh: Mesh) -> dict:
+    bd = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return {
+        "batch": bd,
+        "fsdp": bd,
+        "model": ("model",),
+        "heads": ("model",),
+        "vocab": ("model",),
+        "layers": None,
+    }
+
+
+def rules_serve_stationary(mesh: Mesh) -> dict:
+    r = rules_train(mesh)
+    r["fsdp"] = None  # weights stationary: no per-step regather
+    return r
+
+
+def resolve_spec(
+    axes: Sequence[Optional[str]], shape: Sequence[int], mesh: Mesh, rules: dict
+) -> P:
+    parts = []
+    for dim, ax in zip(shape, axes):
+        target = rules.get(ax) if ax is not None else None
+        if target is None:
+            parts.append(None)
+            continue
+        if isinstance(target, str):
+            target = (target,)
+        if dim % _axes_size(mesh, target) == 0:
+            parts.append(target if len(target) > 1 else target[0])
+        else:
+            parts.append(None)  # divisibility fallback -> replicate
+    return P(*parts)
+
+
+def tree_shardings(spec_tree: PyTree, shape_tree: PyTree, mesh: Mesh, rules: dict) -> PyTree:
+    """Map a logical-axes tree + shapes tree -> NamedSharding tree."""
+
+    def one(axes, arr):
+        return NamedSharding(mesh, resolve_spec(axes, arr.shape, mesh, rules))
+
+    return jax.tree.map(one, spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x))
+
+
+def param_shardings(specs: PyTree, params: PyTree, mesh: Mesh, rules: dict) -> PyTree:
+    return tree_shardings(specs, params, mesh, rules)
+
+
+def batch_sharding(mesh: Mesh, shape: Sequence[int], rules: dict) -> NamedSharding:
+    """Leading-dim batch sharding with fallback for non-divisible batch."""
+    bd = rules["batch"]
+    if bd is not None and shape[0] % _axes_size(mesh, bd) == 0:
+        return NamedSharding(mesh, P(bd if len(bd) > 1 else bd[0], *([None] * (len(shape) - 1))))
+    return NamedSharding(mesh, P(*([None] * len(shape))))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

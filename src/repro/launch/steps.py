@@ -1,0 +1,183 @@
+"""Step functions (train / prefill / decode) and their mesh shardings.
+
+`plan_train` / `plan_decode` / `plan_prefill` return (fn, in_shardings,
+out_shardings, example_inputs) ready for
+``jax.jit(fn, in_shardings=..., out_shardings=...).lower(*inputs)`` — used
+by both the dry-run (AOT, ShapeDtypeStructs) and the real driver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.lm import ModelConfig, build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+from . import sharding as shd
+from .shapes import ShapeSpec, input_specs
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, remat: str = "none"):
+    model = build_model(cfg)
+
+    loss_fn = model.loss
+    if remat == "full":
+        loss_fn = jax.checkpoint(loss_fn)
+    elif remat == "dots":
+        loss_fn = jax.checkpoint(
+            loss_fn, policy=jax.checkpoint_policies.checkpoint_dots
+        )
+
+    def train_step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch
+        )
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state["params"], grads, state["opt"], state["step"]
+        )
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    model = build_model(cfg)
+
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    model = build_model(cfg)
+
+    def decode(params, cache, tokens, position):
+        return model.decode_step(params, cache, tokens, position)
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# sharding plans
+# ---------------------------------------------------------------------------
+
+
+def abstract_state(cfg: ModelConfig):
+    """(state SDS tree, state sharding-axes tree) without allocation."""
+    model = build_model(cfg)
+    params, specs = model.init(jax.random.PRNGKey(0), abstract=True)
+    opt = jax.eval_shape(adamw_init, params)
+    state = {"params": params, "opt": opt, "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    state_axes = {
+        "params": specs,
+        "opt": {"m": specs, "v": specs},
+        "step": (),
+    }
+    return state, state_axes
+
+
+def state_shardings(cfg: ModelConfig, mesh, rules):
+    state, axes = abstract_state(cfg)
+    return jax.tree.map(
+        lambda ax, arr: NamedSharding(mesh, shd.resolve_spec(ax, arr.shape, mesh, rules)),
+        axes,
+        state,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    ), state
+
+
+def batch_shardings(batch_specs, mesh, rules):
+    return {
+        k: shd.batch_sharding(mesh, v.shape, rules) for k, v in batch_specs.items()
+    }
+
+
+def plan_train(cfg: ModelConfig, shape: ShapeSpec, mesh, remat: str = "none",
+               opt_cfg: AdamWConfig | None = None):
+    rules = shd.rules_train(mesh)
+    fn = make_train_step(cfg, opt_cfg or AdamWConfig(), remat=remat)
+    st_shard, state = state_shardings(cfg, mesh, rules)
+    batch = input_specs(cfg, shape)
+    b_shard = batch_shardings(batch, mesh, rules)
+    in_shardings = (st_shard, b_shard)
+    out_shardings = (st_shard, None)
+    return fn, in_shardings, out_shardings, (state, batch)
+
+
+def plan_prefill(cfg: ModelConfig, shape: ShapeSpec, mesh, rules=None):
+    rules = rules or shd.rules_train(mesh)
+    fn = make_prefill_step(cfg)
+    model = build_model(cfg)
+    params, specs = model.init(jax.random.PRNGKey(0), abstract=True)
+    p_shard = jax.tree.map(
+        lambda ax, arr: NamedSharding(mesh, shd.resolve_spec(ax, arr.shape, mesh, rules)),
+        specs, params,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+    batch = input_specs(cfg, shape)
+    b_shard = batch_shardings(batch, mesh, rules)
+    return fn, (p_shard, b_shard), None, (params, batch)
+
+
+def _decode_cache_constraint(mesh, rules):
+    """Per-leaf layout pin for the decode cache inside the layer scan:
+    leading (batch) dim on the batch axes, everything else replicated."""
+    import math
+
+    bd = rules["batch"]
+    size = math.prod(mesh.shape[a] for a in bd) if bd else 1
+
+    def constrain(x):
+        if bd and x.ndim >= 1 and x.shape[0] % size == 0 and x.shape[0] > 1:
+            spec = P(bd if len(bd) > 1 else bd[0], *([None] * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        return x
+
+    return constrain
+
+
+def plan_decode(cfg: ModelConfig, shape: ShapeSpec, mesh, rules=None, pin_cache: bool = False):
+    rules = rules or shd.rules_train(mesh)
+    if pin_cache:
+        cfg = cfg.replace(decode_cache_constraint=_decode_cache_constraint(mesh, rules))
+    fn = make_decode_step(cfg)
+    model = build_model(cfg)
+    params, specs = model.init(jax.random.PRNGKey(0), abstract=True)
+    is_axes_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+    p_shard = jax.tree.map(
+        lambda ax, arr: NamedSharding(mesh, shd.resolve_spec(ax, arr.shape, mesh, rules)),
+        specs, params, is_leaf=is_axes_leaf,
+    )
+    inputs = input_specs(cfg, shape)
+    cache, tokens, position = inputs["cache"], inputs["tokens"], inputs["position"]
+    cache_axes = model.cache_axes(cache)
+    c_shard = jax.tree.map(
+        lambda ax, arr: NamedSharding(mesh, shd.resolve_spec(ax, arr.shape, mesh, rules)),
+        cache_axes, cache, is_leaf=is_axes_leaf,
+    )
+    t_shard = shd.batch_sharding(mesh, tokens.shape, rules)
+    pos_shard = shd.replicated(mesh)
+    in_shardings = (p_shard, c_shard, t_shard, pos_shard)
+    # pin the output cache to the input cache layout (avoids a resharding
+    # copy between steps); logits left to GSPMD
+    out_shardings = (None, c_shard)
+    return fn, in_shardings, out_shardings, (params, cache, tokens, position)

@@ -1,0 +1,222 @@
+"""Grouped-query attention (covers MHA / GQA / MQA) with optional qk-norm,
+QKV bias, and partial rotary embeddings.
+
+Three execution paths share one parameterization:
+  * `attend_full`    — training / prefill over a whole sequence.  impl='ref'
+    materializes (B,H,S,S) scores (oracle); impl='chunked' runs an online-
+    softmax lax.scan over KV blocks (flash-style, O(S·block) memory — the
+    default for lowering); impl='pallas' calls the Pallas TPU kernel.
+  * `attend_decode`  — one query token against a KV cache.
+All softmax math in fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import Tape, apply_rope, rms_norm
+
+NEG_INF = -2.0**30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0  # stablelm-2 uses 0.25
+    causal: bool = True
+    use_rope: bool = True  # whisper uses learned absolute positions instead
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+def init_attention(tape: Tape, spec: AttentionSpec):
+    with tape.scope("attn"):
+        tape.param("wq", (spec.d_model, spec.q_dim), ("fsdp", "model"))
+        tape.param("wk", (spec.d_model, spec.kv_dim), ("fsdp", "model"))
+        tape.param("wv", (spec.d_model, spec.kv_dim), ("fsdp", "model"))
+        tape.param("wo", (spec.q_dim, spec.d_model), ("model", "fsdp"))
+        if spec.qkv_bias:
+            tape.param("bq", (spec.q_dim,), ("model",), init="zeros")
+            tape.param("bk", (spec.kv_dim,), ("model",), init="zeros")
+            tape.param("bv", (spec.kv_dim,), ("model",), init="zeros")
+        if spec.qk_norm:
+            tape.param("q_norm", (spec.head_dim,), (None,), init="ones")
+            tape.param("k_norm", (spec.head_dim,), (None,), init="ones")
+
+
+def _project_qkv(params, spec: AttentionSpec, x, positions):
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dq->bsq", x, params["attn/wq"])
+    k = jnp.einsum("bsd,dq->bsq", x, params["attn/wk"])
+    v = jnp.einsum("bsd,dq->bsq", x, params["attn/wv"])
+    if spec.qkv_bias:
+        q = q + params["attn/bq"]
+        k = k + params["attn/bk"]
+        v = v + params["attn/bv"]
+    q = q.reshape(B, S, spec.n_heads, spec.head_dim)
+    k = k.reshape(B, S, spec.n_kv_heads, spec.head_dim)
+    v = v.reshape(B, S, spec.n_kv_heads, spec.head_dim)
+    if spec.qk_norm:
+        q = rms_norm(q, params["attn/q_norm"])
+        k = rms_norm(k, params["attn/k_norm"])
+    if spec.use_rope:
+        q = apply_rope(q, positions, spec.rope_theta, spec.rope_fraction)
+        k = apply_rope(k, positions, spec.rope_theta, spec.rope_fraction)
+    return q, k, v
+
+
+def _expand_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _sdpa_ref(q, k, v, causal: bool, q_offset=0):
+    """(B,Sq,H,D) x (B,Sk,H,D) -> (B,Sq,H,D), scores materialized (oracle)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + q_offset
+        ki = jnp.arange(Sk)[None, :]
+        scores = jnp.where(ki <= qi, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v)
+
+
+def _sdpa_chunked(q, k, v, causal: bool, block: int = 512):
+    """Online-softmax over KV blocks (flash-style, pure JAX).  Memory per
+    step is O(B·H·Sq·block) instead of O(B·H·Sq·Sk)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    nb = -(-Sk // block)
+    pad = nb * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nb, block, H, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block, H, D).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qi = jnp.arange(Sq)[:, None]
+
+    def body(carry, blk):
+        acc, m_run, l_run, j = carry
+        kj, vj = blk
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kj).astype(jnp.float32) * scale
+        ki = j * block + jnp.arange(block)[None, :]
+        mask = ki <= qi if causal else jnp.ones((Sq, block), bool)
+        mask = mask & (ki < Sk)  # padding
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vj.astype(jnp.float32)
+        )
+        return (acc, m_new, l_new, j + 1), None
+
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m_run, l_run, _), _ = jax.lax.scan(body, (acc0, m0, l0, 0), (kb, vb))
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attend_full(params, spec: AttentionSpec, x, positions, impl: str = "chunked"):
+    """Full-sequence attention (train / prefill).  Returns (out, (k, v))."""
+    q, k, v = _project_qkv(params, spec, x, positions)
+    n_rep = spec.n_heads // spec.n_kv_heads
+    ke, ve = _expand_kv(k, n_rep), _expand_kv(v, n_rep)
+    if impl == "ref":
+        out = _sdpa_ref(q, ke, ve, spec.causal)
+    elif impl == "chunked":
+        out = _sdpa_chunked(q, ke, ve, spec.causal)
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(q, ke, ve, causal=spec.causal)
+    else:
+        raise ValueError(impl)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, spec.q_dim)
+    return jnp.einsum("bsq,qd->bsd", out, params["attn/wo"]), (k, v)
+
+
+def attend_cross(params, spec: AttentionSpec, x, kv, impl: str = "ref"):
+    """Cross attention: queries from x, (k, v) precomputed from the encoder."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dq->bsq", x, params["attn/wq"])
+    if spec.qkv_bias:
+        q = q + params["attn/bq"]
+    q = q.reshape(B, S, spec.n_heads, spec.head_dim)
+    k, v = kv
+    n_rep = spec.n_heads // spec.n_kv_heads
+    ke, ve = _expand_kv(k, n_rep), _expand_kv(v, n_rep)
+    if impl == "chunked":
+        out = _sdpa_chunked(q, ke, ve, causal=False)
+    else:
+        out = _sdpa_ref(q, ke, ve, causal=False)
+    out = out.reshape(B, S, spec.q_dim)
+    return jnp.einsum("bsq,qd->bsd", out, params["attn/wo"])
+
+
+def encode_kv(params, spec: AttentionSpec, x_enc):
+    """Precompute cross-attention (k, v) from encoder states."""
+    B, S, _ = x_enc.shape
+    k = jnp.einsum("bsd,dq->bsq", x_enc, params["attn/wk"])
+    v = jnp.einsum("bsd,dq->bsq", x_enc, params["attn/wv"])
+    if spec.qkv_bias:
+        k = k + params["attn/bk"]
+        v = v + params["attn/bv"]
+    return (
+        k.reshape(B, S, spec.n_kv_heads, spec.head_dim),
+        v.reshape(B, S, spec.n_kv_heads, spec.head_dim),
+    )
+
+
+def attend_decode(params, spec: AttentionSpec, x, cache_k, cache_v, position, constrain=None):
+    """One-token decode.  x: (B,1,d); cache_{k,v}: (B,S_max,KV,D) with valid
+    entries < position.  Returns (out, new_k, new_v) — caller scatters the
+    new KV at `position`.  `constrain` (optional) pins the new KV slice's
+    layout before the cache update so GSPMD keeps the update local instead
+    of resharding the whole cache (see launch.steps.plan_decode)."""
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(
+        params, spec, x, jnp.full((B, 1), position, jnp.int32)
+    )
+    k_new = k_new.astype(cache_k.dtype)
+    v_new = v_new.astype(cache_v.dtype)
+    if constrain is not None:
+        k_new, v_new = constrain(k_new), constrain(v_new)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, position, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, position, axis=1)
+    n_rep = spec.n_heads // spec.n_kv_heads
+    ke, ve = _expand_kv(ck, n_rep), _expand_kv(cv, n_rep)
+    S = ck.shape[1]
+    scale = 1.0 / jnp.sqrt(spec.head_dim).astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, ke).astype(jnp.float32) * scale
+    valid = (jnp.arange(S) <= position)[None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(x.dtype), ve)
+    out = out.reshape(B, 1, spec.q_dim)
+    return jnp.einsum("bsq,qd->bsd", out, params["attn/wo"]), ck, cv

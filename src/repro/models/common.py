@@ -1,0 +1,193 @@
+"""Shared model-building substrate.
+
+`Tape` is the param builder: every parameter is declared once with its shape
+AND its logical sharding axes; `abstract=True` yields ShapeDtypeStructs
+instead of arrays so the 236B-param dry-run never allocates.  Logical axes
+are resolved to mesh PartitionSpecs by `repro.launch.sharding`.
+
+Logical axis vocabulary (resolved per-mesh, with divisibility fallback):
+  'batch'   -> ('pod','data')     activations leading dim
+  'fsdp'    -> ('pod','data')     weight dim sharded FSDP-style
+  'model'   -> 'model'            tensor-parallel weight/activation dim
+  'layers'  -> None               scan-stacked layer dim
+  None      -> replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# parameter tape
+# ---------------------------------------------------------------------------
+
+
+class Tape:
+    """Declares parameters; records a parallel tree of logical-axis tuples."""
+
+    def __init__(self, key, abstract: bool = False, dtype=jnp.bfloat16):
+        self._key = key
+        self.abstract = abstract
+        self.dtype = dtype
+        self.params: Dict[str, Any] = {}
+        self.specs: Dict[str, Tuple[Optional[str], ...]] = {}
+        self._scope: list[str] = []
+
+    # -- scoping -----------------------------------------------------------
+    def scope(self, name: str) -> "_Scope":
+        return _Scope(self, name)
+
+    def _full(self, name: str) -> str:
+        return "/".join(self._scope + [name])
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -- declaration --------------------------------------------------------
+    def param(
+        self,
+        name: str,
+        shape: Sequence[int],
+        axes: Sequence[Optional[str]],
+        init: str = "normal",
+        scale: Optional[float] = None,
+        dtype=None,
+    ):
+        shape = tuple(int(s) for s in shape)
+        axes = tuple(axes)
+        if len(shape) != len(axes):
+            raise ValueError(f"{self._full(name)}: shape {shape} vs axes {axes}")
+        dtype = dtype or self.dtype
+        full = self._full(name)
+        if full in self.params:
+            raise ValueError(f"duplicate param {full}")
+        self.specs[full] = axes
+        if self.abstract:
+            value = jax.ShapeDtypeStruct(shape, dtype)
+        else:
+            value = _init_value(self._next_key(), shape, init, scale, dtype)
+        self.params[full] = value
+        return value
+
+
+class _Scope:
+    def __init__(self, tape: Tape, name: str):
+        self.tape, self.name = tape, name
+
+    def __enter__(self):
+        self.tape._scope.append(self.name)
+        return self.tape
+
+    def __exit__(self, *exc):
+        self.tape._scope.pop()
+
+
+def _init_value(key, shape, init, scale, dtype):
+    if init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if init == "ones":
+        return jnp.ones(shape, dtype)
+    if init == "normal":
+        fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+        std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    if init == "embed":
+        std = scale if scale is not None else 0.02
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    raise ValueError(init)
+
+
+def stack_layer_params(per_layer: Sequence[Dict[str, Any]], abstract: bool):
+    """Stack L same-structure param dicts along a new leading 'layers' dim."""
+    keys = per_layer[0].keys()
+    out = {}
+    for k in keys:
+        vals = [pl[k] for pl in per_layer]
+        if abstract:
+            v0 = vals[0]
+            out[k] = jax.ShapeDtypeStruct((len(vals),) + tuple(v0.shape), v0.dtype)
+        else:
+            out[k] = jnp.stack(vals)
+    return out
+
+
+def prepend_layer_axis(specs: Dict[str, Tuple], n: int) -> Dict[str, Tuple]:
+    return {k: ("layers",) + tuple(v) for k, v in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-6, offset: float = 0.0):
+    """RMSNorm in fp32 (offset=1.0 gives Gemma's (1+w) convention)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32) + offset
+    return (y * w).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS: Dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": gelu,
+    "relu": jax.nn.relu,
+}
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0, fraction: float = 1.0):
+    """Rotate the first `fraction` of the head dim.  x: (..., S, H, D),
+    positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    freqs = rope_frequencies(rot, theta)  # (rot/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, rot/2)
+    angles = angles[..., None, :]  # (..., S, 1, rot/2) broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# vocab padding (TP divisibility; see DESIGN.md)
+# ---------------------------------------------------------------------------
+
+
+def pad_vocab(vocab: int, multiple: int = 512) -> int:
+    return ((vocab + multiple - 1) // multiple) * multiple

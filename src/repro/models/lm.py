@@ -1,0 +1,662 @@
+"""Model assembly: decoder-only LMs (dense / MoE / MLA / SSM / hybrid),
+encoder-decoder (Whisper), and VLM (LLaVA backbone + stub frontend).
+
+One `ModelConfig` describes every assigned architecture; `build_model`
+returns a `Model` with:
+
+    init(key, abstract)          -> (params, logical-axis specs)
+    loss(params, batch)          -> (scalar, metrics)      train objective
+    prefill(params, batch)       -> (logits, cache)        inference prefill
+    decode_step(params, cache, tokens, position) -> (logits, cache)
+
+The layer trunk is a `lax.scan` over stacked per-layer params so HLO size —
+and therefore the 80 AOT dry-run compiles — stays O(1) in depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import mlp as mlp_mod
+from . import ssm as ssm_mod
+from .common import Tape, layer_norm, pad_vocab, rms_norm
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    # attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    norm_offset: float = 0.0  # gemma's (1+w) RMSNorm
+    act: str = "silu"
+    gated_mlp: bool = True
+    embed_scale: bool = False  # gemma: embeddings scaled by sqrt(d_model)
+    # MLA (deepseek)
+    mla: Optional[mla_mod.MLASpec] = None
+    # MoE
+    moe: Optional[moe_mod.MoESpec] = None
+    # SSM
+    ssm: Optional[ssm_mod.SSMSpec] = None
+    # hybrid (zamba2): shared attention block every `attn_every` ssm layers
+    attn_every: int = 0
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    enc_positions: int = 1500  # frame embeddings from the (stub) conv frontend
+    # vlm (llava): precomputed patch embeddings prepended to the text tokens
+    vision_patches: int = 0
+    # execution knobs (overridable per step, see launch.steps)
+    attn_impl: str = "chunked"  # ref | chunked | pallas
+    moe_impl: str = "gather"  # gather | dense
+    mla_decode_impl: str = "naive"  # naive | absorbed
+    ssm_impl: str = "jnp"  # jnp | pallas
+    param_dtype: Any = jnp.bfloat16
+    # scan unroll factor; the dry-run lowers each cell at unroll=1 and 2 to
+    # undo XLA cost_analysis' count-loop-body-once behavior (see dryrun.py)
+    scan_unroll: int = 1
+    # optional per-leaf sharding constraint applied to the decode cache
+    # INSIDE the layer scan: pins the cache layout through the loop so GSPMD
+    # cannot re-lay it out (which costs a full-cache all-gather per step).
+    # Set by launch.steps.plan_decode; a §Perf iteration (see EXPERIMENTS).
+    decode_cache_constraint: Any = None
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_vocab(self.vocab)
+
+    @property
+    def attn_spec(self) -> attn_mod.AttentionSpec:
+        return attn_mod.AttentionSpec(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.resolved_head_dim,
+            qkv_bias=self.qkv_bias,
+            qk_norm=self.qk_norm,
+            rope_theta=self.rope_theta,
+            rope_fraction=self.rope_fraction,
+            use_rope=self.family != "encdec",
+        )
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Total parameter count (from abstract init, no allocation)."""
+        import math
+
+        params, _ = build_model(self).init(jax.random.PRNGKey(0), abstract=True)
+        return sum(math.prod(v.shape) for v in jax.tree.leaves(params))
+
+    def scan_sites(self, kind: str) -> tuple[int, int]:
+        """(number of layer-scan sites, total scanned layers) for the given
+        step kind — the dry-run's loop-body cost correction (see dryrun.py).
+        Bodies at different sites must have equal per-layer cost (true for
+        every assigned arch: homogeneous trunks / equal enc-dec depths /
+        identical hybrid segments)."""
+        if self.family == "encdec":
+            if kind == "decode":
+                return 1, self.n_layers
+            return 2, self.n_enc_layers + self.n_layers
+        if self.family == "hybrid":
+            n_seg = -(-self.n_layers // self.attn_every)
+            return n_seg, self.n_layers
+        return 1, self.n_layers
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        m = self.moe
+        per_expert = 3 * m.d_ff * m.d_model
+        inactive = (m.n_experts - m.top_k) * per_expert * self._n_moe_layers()
+        return total - inactive
+
+    def _n_moe_layers(self) -> int:
+        return self.n_layers if self.moe is not None else 0
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def _init_norm(tape: Tape, cfg: ModelConfig, name: str):
+    with tape.scope(name):
+        tape.param("w", (cfg.d_model,), (None,), init="zeros" if cfg.norm_offset else "ones")
+        if cfg.norm == "layernorm":
+            tape.param("b", (cfg.d_model,), (None,), init="zeros")
+
+
+def _apply_norm(params, cfg: ModelConfig, x, name: str):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, params[f"{name}/w"], params[f"{name}/b"])
+    return rms_norm(x, params[f"{name}/w"], offset=1.0 if cfg.norm_offset else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# layer blocks (init + full-seq apply + decode apply)
+# ---------------------------------------------------------------------------
+
+
+def _init_transformer_layer(tape: Tape, cfg: ModelConfig, cross: bool = False):
+    _init_norm(tape, cfg, "ln_attn")
+    attn_mod.init_attention(tape, cfg.attn_spec)
+    if cross:
+        _init_norm(tape, cfg, "ln_cross")
+        with tape.scope("cross"):
+            attn_mod.init_attention(tape, dataclasses.replace(cfg.attn_spec, causal=False))
+    _init_norm(tape, cfg, "ln_mlp")
+    if cfg.moe is not None:
+        moe_mod.init_moe(tape, cfg.moe)
+    elif cfg.gated_mlp:
+        mlp_mod.init_gated_mlp(tape, cfg.d_model, cfg.d_ff)
+    else:
+        mlp_mod.init_plain_mlp(tape, cfg.d_model, cfg.d_ff)
+
+
+def _init_mla_layer(tape: Tape, cfg: ModelConfig):
+    _init_norm(tape, cfg, "ln_attn")
+    mla_mod.init_mla(tape, cfg.mla)
+    _init_norm(tape, cfg, "ln_mlp")
+    if cfg.moe is not None:
+        moe_mod.init_moe(tape, cfg.moe)
+    else:
+        mlp_mod.init_gated_mlp(tape, cfg.d_model, cfg.d_ff)
+
+
+def _init_ssm_layer(tape: Tape, cfg: ModelConfig):
+    _init_norm(tape, cfg, "ln_ssm")
+    ssm_mod.init_ssm(tape, cfg.ssm)
+
+
+def _ffn_apply(lp, cfg: ModelConfig, h):
+    """Returns (delta, aux)."""
+    if cfg.moe is not None:
+        return moe_mod.moe_ffn(lp, cfg.moe, h, impl=cfg.moe_impl)
+    if cfg.gated_mlp:
+        return mlp_mod.gated_mlp(lp, h, act=cfg.act), 0.0
+    return mlp_mod.plain_mlp(lp, h, act=cfg.act), 0.0
+
+
+def _transformer_layer_full(lp, cfg: ModelConfig, h, positions):
+    a, kv = (
+        mla_mod.mla_full(lp, cfg.mla, _apply_norm(lp, cfg, h, "ln_attn"), positions, cfg.attn_impl)
+        if cfg.mla is not None
+        else attn_mod.attend_full(
+            lp, cfg.attn_spec, _apply_norm(lp, cfg, h, "ln_attn"), positions, cfg.attn_impl
+        )
+    )
+    h = h + a
+    f, aux = _ffn_apply(lp, cfg, _apply_norm(lp, cfg, h, "ln_mlp"))
+    return h + f, kv, aux
+
+
+def _constrain(cfg: ModelConfig, tree):
+    if cfg.decode_cache_constraint is None:
+        return tree
+    return jax.tree.map(cfg.decode_cache_constraint, tree)
+
+
+def _transformer_layer_decode(lp, cfg: ModelConfig, h, cache, position):
+    hn = _apply_norm(lp, cfg, h, "ln_attn")
+    if cfg.mla is not None:
+        a, ckv, kpe = mla_mod.mla_decode(
+            lp, cfg.mla, hn, cache[0], cache[1], position, cfg.mla_decode_impl
+        )
+        new_cache = _constrain(cfg, (ckv, kpe))
+    else:
+        a, ck, cv = attn_mod.attend_decode(
+            lp, cfg.attn_spec, hn, cache[0], cache[1], position,
+            constrain=cfg.decode_cache_constraint,
+        )
+        new_cache = _constrain(cfg, (ck, cv))
+    h = h + a
+    f, _ = _ffn_apply(lp, cfg, _apply_norm(lp, cfg, h, "ln_mlp"))
+    return h + f, new_cache
+
+
+def _ssm_layer_full(lp, cfg: ModelConfig, h):
+    out, state = ssm_mod.ssm_full(lp, cfg.ssm, _apply_norm(lp, cfg, h, "ln_ssm"), impl=cfg.ssm_impl)
+    return h + out, state
+
+
+def _ssm_layer_decode(lp, cfg: ModelConfig, h, conv_state, ssm_state):
+    out, cs, ss = ssm_mod.ssm_decode(lp, cfg.ssm, _apply_norm(lp, cfg, h, "ln_ssm"), conv_state, ssm_state)
+    return h + out, cs, ss
+
+
+# ---------------------------------------------------------------------------
+# stacked init
+# ---------------------------------------------------------------------------
+
+
+def _init_stacked(key, n_layers: int, abstract: bool, dtype, init_fn):
+    if abstract:
+        tape = Tape(key, abstract=True, dtype=dtype)
+        init_fn(tape)
+        params = {
+            k: jax.ShapeDtypeStruct((n_layers,) + tuple(v.shape), v.dtype)
+            for k, v in tape.params.items()
+        }
+        specs = {k: ("layers",) + tuple(s) for k, s in tape.specs.items()}
+        return params, specs
+    stacked, specs = {}, {}
+    tapes = []
+    for _ in range(n_layers):
+        key, sub = jax.random.split(key)
+        t = Tape(sub, abstract=False, dtype=dtype)
+        init_fn(t)
+        tapes.append(t)
+    for k in tapes[0].params:
+        stacked[k] = jnp.stack([t.params[k] for t in tapes])
+        specs[k] = ("layers",) + tuple(tapes[0].specs[k])
+    return stacked, specs
+
+
+# ---------------------------------------------------------------------------
+# the Model facade
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Model:
+    config: ModelConfig
+
+    # ----------------------------------------------------------------- init
+    def init(self, key, abstract: bool = False) -> Tuple[PyTree, PyTree]:
+        cfg = self.config
+        k_emb, k_layers, k_top, k_extra = jax.random.split(key, 4)
+        params: Dict[str, Any] = {}
+        specs: Dict[str, Any] = {}
+
+        tape = Tape(k_emb, abstract=abstract, dtype=cfg.param_dtype)
+        tape.param("embed", (cfg.padded_vocab, cfg.d_model), ("model", "fsdp"), init="embed")
+        tape.param("unembed", (cfg.d_model, cfg.padded_vocab), ("fsdp", "model"))
+        _init_norm(tape, cfg, "final_norm")
+        params["top"], specs["top"] = tape.params, tape.specs
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            init_fn = (
+                functools.partial(_init_mla_layer, cfg=cfg)
+                if cfg.mla is not None
+                else functools.partial(_init_transformer_layer, cfg=cfg)
+            )
+            params["layers"], specs["layers"] = _init_stacked(
+                k_layers, cfg.n_layers, abstract, cfg.param_dtype, lambda t: init_fn(t)
+            )
+        elif cfg.family == "ssm":
+            params["layers"], specs["layers"] = _init_stacked(
+                k_layers, cfg.n_layers, abstract, cfg.param_dtype,
+                lambda t: _init_ssm_layer(t, cfg),
+            )
+        elif cfg.family == "hybrid":
+            params["layers"], specs["layers"] = _init_stacked(
+                k_layers, cfg.n_layers, abstract, cfg.param_dtype,
+                lambda t: _init_ssm_layer(t, cfg),
+            )
+            tape = Tape(k_top, abstract=abstract, dtype=cfg.param_dtype)
+            _init_transformer_layer(tape, cfg.replace(moe=None))
+            params["shared_attn"], specs["shared_attn"] = tape.params, tape.specs
+        elif cfg.family == "encdec":
+            params["enc_layers"], specs["enc_layers"] = _init_stacked(
+                k_layers, cfg.n_enc_layers, abstract, cfg.param_dtype,
+                lambda t: _init_transformer_layer(t, cfg.replace(moe=None)),
+            )
+            params["layers"], specs["layers"] = _init_stacked(
+                k_extra, cfg.n_layers, abstract, cfg.param_dtype,
+                lambda t: _init_transformer_layer(t, cfg.replace(moe=None), cross=True),
+            )
+            tape = Tape(k_top, abstract=abstract, dtype=cfg.param_dtype)
+            tape.param("enc_pos", (cfg.enc_positions, cfg.d_model), (None, "fsdp"), init="embed")
+            tape.param("dec_pos", (65536, cfg.d_model), (None, "fsdp"), init="embed")
+            _init_norm(tape, cfg, "enc_final_norm")
+            params["extra"], specs["extra"] = tape.params, tape.specs
+        else:
+            raise ValueError(cfg.family)
+        return params, specs
+
+    # ------------------------------------------------------------ embedding
+    def _embed(self, params, tokens):
+        cfg = self.config
+        h = jnp.take(params["top"]["embed"], tokens, axis=0)
+        if cfg.embed_scale:
+            h = h * jnp.sqrt(jnp.float32(cfg.d_model)).astype(h.dtype)
+        return h
+
+    def _logits(self, params, h):
+        cfg = self.config
+        h = _apply_norm(params["top"], cfg, h, "final_norm")
+        return jnp.einsum("bsd,dv->bsv", h, params["top"]["unembed"])
+
+    # -------------------------------------------------------------- forward
+    def forward(self, params, tokens, vision_embeds=None, enc_embeds=None):
+        """Full-sequence forward -> (logits, cache, aux).  The cache layout
+        matches decode_step so prefill can hand off directly."""
+        cfg = self.config
+        h = self._embed(params, tokens)
+        if cfg.family == "vlm":
+            assert vision_embeds is not None
+            h = jnp.concatenate([vision_embeds.astype(h.dtype), h], axis=1)
+        B, S, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+        if cfg.family == "encdec":
+            return self._forward_encdec(params, h, enc_embeds)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+
+            def body(carry, lp):
+                h, aux = carry
+                h, kv, aux_l = _transformer_layer_full(lp, cfg, h, positions)
+                return (h, aux + aux_l), kv
+
+            (h, aux), kv = jax.lax.scan(body, (h, 0.0), params["layers"], unroll=cfg.scan_unroll)
+            logits = self._logits(params, h)
+            return logits, kv, aux
+
+        if cfg.family == "ssm":
+
+            def body(h, lp):
+                h, state = _ssm_layer_full(lp, cfg, h)
+                return h, state
+
+            h, states = jax.lax.scan(body, h, params["layers"], unroll=cfg.scan_unroll)
+            logits = self._logits(params, h)
+            return logits, states, 0.0
+
+        if cfg.family == "hybrid":
+            return self._forward_hybrid(params, h, positions)
+
+        raise ValueError(cfg.family)
+
+    def _hybrid_segments(self):
+        cfg = self.config
+        segs, start = [], 0
+        while start < cfg.n_layers:
+            end = min(start + cfg.attn_every, cfg.n_layers)
+            segs.append((start, end))
+            start = end
+        return segs
+
+    def _forward_hybrid(self, params, h, positions):
+        cfg = self.config
+        ssm_states, attn_caches = [], []
+        shared = params["shared_attn"]
+        for i, (a, b) in enumerate(self._hybrid_segments()):
+            seg = jax.tree.map(lambda x: x[a:b], params["layers"])
+
+            def body(h, lp):
+                h, state = _ssm_layer_full(lp, cfg, h)
+                return h, state
+
+            h, states = jax.lax.scan(body, h, seg, unroll=cfg.scan_unroll)
+            ssm_states.append(states)
+            h, kv, _ = _transformer_layer_full(shared, cfg.replace(moe=None), h, positions)
+            attn_caches.append(kv)
+        logits = self._logits(params, h)
+        return logits, (ssm_states, attn_caches), 0.0
+
+    def _forward_encdec(self, params, h_dec, enc_embeds):
+        cfg = self.config
+        enc_cfg = cfg.replace(moe=None)
+        # encoder (bidirectional, learned positions from the stub frontend)
+        he = enc_embeds.astype(h_dec.dtype) + params["extra"]["enc_pos"][None, : enc_embeds.shape[1]]
+        pos_e = jnp.broadcast_to(jnp.arange(he.shape[1]), he.shape[:2])
+
+        def enc_body(h, lp):
+            spec = dataclasses.replace(enc_cfg.attn_spec, causal=False)
+            a, _ = attn_mod.attend_full(lp, spec, _apply_norm(lp, enc_cfg, h, "ln_attn"), pos_e, "ref")
+            h = h + a
+            f, _ = _ffn_apply(lp, enc_cfg, _apply_norm(lp, enc_cfg, h, "ln_mlp"))
+            return h + f, None
+
+        he, _ = jax.lax.scan(enc_body, he, params["enc_layers"], unroll=cfg.scan_unroll)
+        he = _apply_norm(params["extra"], cfg, he, "enc_final_norm")
+
+        # per-layer cross KV
+        def cross_kv(lp):
+            spec = dataclasses.replace(enc_cfg.attn_spec, causal=False)
+            return attn_mod.encode_kv({k.replace("cross/", ""): v for k, v in lp.items() if k.startswith("cross/")}, spec, he)
+
+        cross_kvs = jax.vmap(cross_kv)(params["layers"])
+
+        # decoder
+        S = h_dec.shape[1]
+        h = h_dec + params["extra"]["dec_pos"][None, :S]
+        pos_d = jnp.broadcast_to(jnp.arange(S), h.shape[:2])
+
+        def dec_body(h, xs):
+            lp, ckv = xs
+            a, kv = attn_mod.attend_full(
+                lp, enc_cfg.attn_spec, _apply_norm(lp, enc_cfg, h, "ln_attn"), pos_d, cfg.attn_impl
+            )
+            h = h + a
+            cp = {k.replace("cross/", ""): v for k, v in lp.items() if k.startswith("cross/")}
+            c = attn_mod.attend_cross(
+                cp, dataclasses.replace(enc_cfg.attn_spec, causal=False),
+                _apply_norm(lp, enc_cfg, h, "ln_cross"), ckv,
+            )
+            h = h + c
+            f, _ = _ffn_apply(lp, enc_cfg, _apply_norm(lp, enc_cfg, h, "ln_mlp"))
+            return h + f, kv
+
+        h, self_kv = jax.lax.scan(dec_body, h, (params["layers"], cross_kvs), unroll=cfg.scan_unroll)
+        logits = self._logits(params, h)
+        return logits, (self_kv, cross_kvs), 0.0
+
+    # ----------------------------------------------------------------- loss
+    def loss(self, params, batch):
+        """Next-token CE (fp32) + MoE aux.  batch: {tokens, labels, [extras]}."""
+        cfg = self.config
+        logits, _, aux = self.forward(
+            params,
+            batch["tokens"],
+            vision_embeds=batch.get("vision_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+        )
+        labels = batch["labels"]
+        if cfg.family == "vlm":  # logits cover [vision; text]; loss on text
+            logits = logits[:, cfg.vision_patches :]
+        logits = logits.astype(jnp.float32)
+        mask = (labels >= 0).astype(jnp.float32)
+        safe = jnp.maximum(labels, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        ce = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # -------------------------------------------------------------- serving
+    def prefill(self, params, batch):
+        logits, cache, _ = self.forward(
+            params,
+            batch["tokens"],
+            vision_embeds=batch.get("vision_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+        )
+        return logits[:, -1], cache
+
+    def decode_step(self, params, cache, tokens, position):
+        """tokens: (B,) int32; position: scalar int32 (write offset).
+        Returns (logits (B, vocab), new cache)."""
+        cfg = self.config
+        h = self._embed(params, tokens[:, None])
+
+        if cfg.family in ("dense", "moe", "vlm"):
+
+            def body(h, xs):
+                lp, c = xs
+                h, nc = _transformer_layer_decode(lp, cfg, h, c, position)
+                return h, nc
+
+            h, new_cache = jax.lax.scan(body, h, (params["layers"], cache), unroll=cfg.scan_unroll)
+            return self._logits(params, h)[:, 0], new_cache
+
+        if cfg.family == "ssm":
+
+            def body(h, xs):
+                lp, (cs, ss) = xs
+                h, ncs, nss = _ssm_layer_decode(lp, cfg, h, cs, ss)
+                return h, _constrain(cfg, (ncs, nss))
+
+            h, new_states = jax.lax.scan(body, h, (params["layers"], cache), unroll=cfg.scan_unroll)
+            return self._logits(params, h)[:, 0], new_states
+
+        if cfg.family == "hybrid":
+            ssm_states, attn_caches = cache
+            new_ssm, new_attn = [], []
+            shared = params["shared_attn"]
+            for i, (a, b) in enumerate(self._hybrid_segments()):
+                seg = jax.tree.map(lambda x: x[a:b], params["layers"])
+
+                def body(h, xs):
+                    lp, (cs, ss) = xs
+                    h, ncs, nss = _ssm_layer_decode(lp, cfg, h, cs, ss)
+                    return h, (ncs, nss)
+
+                h, st = jax.lax.scan(body, h, (seg, ssm_states[i]), unroll=cfg.scan_unroll)
+                new_ssm.append(st)
+                h, nc = _transformer_layer_decode(
+                    shared, cfg.replace(moe=None), h, attn_caches[i], position
+                )
+                new_attn.append(nc)
+            return self._logits(params, h)[:, 0], (new_ssm, new_attn)
+
+        if cfg.family == "encdec":
+            self_kv, cross_kvs = cache
+            enc_cfg = cfg.replace(moe=None)
+            h = h + jax.lax.dynamic_slice_in_dim(params["extra"]["dec_pos"], position, 1, axis=0)[None]
+
+            def body(h, xs):
+                lp, (ck, cv), ckv = xs
+                hn = _apply_norm(lp, enc_cfg, h, "ln_attn")
+                a, nk, nv = attn_mod.attend_decode(
+                    lp, enc_cfg.attn_spec, hn, ck, cv, position,
+                    constrain=cfg.decode_cache_constraint,
+                )
+                h = h + a
+                cp = {k.replace("cross/", ""): v for k, v in lp.items() if k.startswith("cross/")}
+                c = attn_mod.attend_cross(
+                    cp, dataclasses.replace(enc_cfg.attn_spec, causal=False),
+                    _apply_norm(lp, enc_cfg, h, "ln_cross"), ckv,
+                )
+                h = h + c
+                f, _ = _ffn_apply(lp, enc_cfg, _apply_norm(lp, enc_cfg, h, "ln_mlp"))
+                return h + f, _constrain(cfg, (nk, nv))
+
+            h, new_self = jax.lax.scan(body, h, (params["layers"], self_kv, cross_kvs), unroll=cfg.scan_unroll)
+            return self._logits(params, h)[:, 0], (new_self, cross_kvs)
+
+        raise ValueError(cfg.family)
+
+
+    # -------------------------------------------------------- cache utils
+    def cache_axes(self, cache):
+        """Logical sharding axes tree matching the cache structure (used by
+        repro.launch.sharding to build decode in_shardings)."""
+        cfg = self.config
+        KV = ("layers", "batch", None, "heads", None)
+        if cfg.family in ("dense", "moe", "vlm"):
+            if cfg.mla is not None:
+                lat = ("layers", "batch", None, None)
+                return (lat, lat)
+            return (KV, KV)
+        if cfg.family == "ssm":
+            return (
+                ("layers", "batch", None, "model"),
+                ("layers", "batch", "heads", None, None),
+            )
+        if cfg.family == "hybrid":
+            ssm_states, attn_caches = cache
+            seg = (
+                ("layers", "batch", None, "model"),
+                ("layers", "batch", "heads", None, None),
+            )
+            akv = ("batch", None, "heads", None)
+            return (
+                [seg for _ in ssm_states],
+                [(akv, akv) for _ in attn_caches],
+            )
+        if cfg.family == "encdec":
+            return ((KV, KV), (KV, KV))
+        raise ValueError(cfg.family)
+
+    def grow_cache(self, cache, target_len: int):
+        """Pad the seq axis of every KV buffer to `target_len` (SSM states
+        are seq-free and pass through)."""
+        cfg = self.config
+
+        def pad_seq(x, axis):
+            cur = x.shape[axis]
+            if cur >= target_len:
+                return x
+            pads = [(0, 0)] * x.ndim
+            pads[axis] = (0, target_len - cur)
+            return jnp.pad(x, pads)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            return tuple(pad_seq(c, 2) for c in cache)
+        if cfg.family == "ssm":
+            return cache
+        if cfg.family == "hybrid":
+            ssm_states, attn_caches = cache
+            return (ssm_states, [tuple(pad_seq(c, 1) for c in kv) for kv in attn_caches])
+        if cfg.family == "encdec":
+            self_kv, cross = cache
+            return (tuple(pad_seq(c, 2) for c in self_kv), cross)
+        raise ValueError(cfg.family)
+
+    def generate(self, params, batch, steps: int, greedy: bool = True, key=None):
+        """Simple generation loop for the examples (prefill + decode)."""
+        prompt_len = batch["tokens"].shape[1]
+        total = prompt_len + steps
+        if self.config.family == "vlm":
+            total += self.config.vision_patches
+            prompt_len += self.config.vision_patches
+        logits, cache = self.prefill(params, batch)
+        cache = self.grow_cache(cache, total)
+        toks = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for i in range(steps):
+            toks.append(tok)
+            if i == steps - 1:
+                break
+            logits, cache = self.decode_step(params, cache, tok, prompt_len + i)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jnp.stack(toks, axis=1)
+
+
+def build_model(config: ModelConfig) -> Model:
+    return Model(config)

@@ -1,0 +1,139 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Queries and KV are projected through low-rank latents; the KV cache stores
+only the (kv_lora + rope) latent per token — 576 dims instead of
+2·H·head_dim.
+
+Decode paths:
+  * 'naive'    — decompress the whole latent cache through w_ukv every step
+    (baseline; FLOPs O(S · kv_lora · H · (d_nope + d_v)) per token).
+  * 'absorbed' — absorb w_uk into the query and w_uv into the output so
+    attention runs directly in latent space; per-token FLOPs drop to
+    O(H·kv_lora·(d_nope+d_v)) + O(S·H·(kv_lora+d_rope)).  This is the
+    §Perf hillclimb for decode cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF, _sdpa_chunked, _sdpa_ref
+from .common import Tape, apply_rope, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class MLASpec:
+    d_model: int
+    n_heads: int
+    q_lora: int = 1536
+    kv_lora: int = 512
+    d_nope: int = 128
+    d_rope: int = 64
+    d_v: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def qk_dim(self) -> int:
+        return self.d_nope + self.d_rope
+
+    @property
+    def cache_dim(self) -> int:
+        return self.kv_lora + self.d_rope
+
+
+def init_mla(tape: Tape, spec: MLASpec):
+    H = spec.n_heads
+    with tape.scope("mla"):
+        tape.param("w_dq", (spec.d_model, spec.q_lora), ("fsdp", None))
+        tape.param("q_norm", (spec.q_lora,), (None,), init="ones")
+        tape.param("w_uq", (spec.q_lora, H * spec.qk_dim), ("fsdp", "model"))
+        tape.param("w_dkv", (spec.d_model, spec.kv_lora + spec.d_rope), ("fsdp", None))
+        tape.param("kv_norm", (spec.kv_lora,), (None,), init="ones")
+        tape.param("w_ukv", (spec.kv_lora, H * (spec.d_nope + spec.d_v)), ("fsdp", "model"))
+        tape.param("w_o", (H * spec.d_v, spec.d_model), ("model", "fsdp"))
+
+
+def _q_proj(params, spec: MLASpec, x, positions):
+    B, S, _ = x.shape
+    H = spec.n_heads
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["mla/w_dq"]), params["mla/q_norm"])
+    q = jnp.einsum("bsr,rq->bsq", cq, params["mla/w_uq"]).reshape(B, S, H, spec.qk_dim)
+    q_nope, q_pe = q[..., : spec.d_nope], q[..., spec.d_nope :]
+    q_pe = apply_rope(q_pe, positions, spec.rope_theta)
+    return q_nope, q_pe
+
+
+def _latent_proj(params, spec: MLASpec, x, positions):
+    """x -> (c_kv (B,S,R) normalized, k_pe (B,S,dr) rotated)."""
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, params["mla/w_dkv"])
+    c_kv = rms_norm(ckv_full[..., : spec.kv_lora], params["mla/kv_norm"])
+    k_pe = ckv_full[..., spec.kv_lora :][:, :, None, :]  # (B,S,1,dr)
+    k_pe = apply_rope(k_pe, positions, spec.rope_theta)[:, :, 0, :]
+    return c_kv, k_pe
+
+
+def _decompress(params, spec: MLASpec, c_kv):
+    B, S, _ = c_kv.shape
+    H = spec.n_heads
+    kv = jnp.einsum("bsr,rq->bsq", c_kv, params["mla/w_ukv"])
+    kv = kv.reshape(B, S, H, spec.d_nope + spec.d_v)
+    return kv[..., : spec.d_nope], kv[..., spec.d_nope :]  # k_nope, v
+
+
+def mla_full(params, spec: MLASpec, x, positions, impl: str = "chunked"):
+    """Training / prefill.  Returns (out, (c_kv, k_pe)) — the latent cache."""
+    B, S, _ = x.shape
+    H = spec.n_heads
+    q_nope, q_pe = _q_proj(params, spec, x, positions)
+    c_kv, k_pe = _latent_proj(params, spec, x, positions)
+    k_nope, v = _decompress(params, spec, c_kv)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, spec.d_rope))], axis=-1)
+    # pad v to qk_dim so the flash path can run one fused kernel, then slice
+    sdpa = _sdpa_chunked if impl == "chunked" else _sdpa_ref
+    out = sdpa(q, k, v, causal=True) if v.shape[-1] == q.shape[-1] else sdpa(
+        q, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, spec.qk_dim - spec.d_v))), causal=True
+    )[..., : spec.d_v]
+    out = out.reshape(B, S, H * spec.d_v)
+    return jnp.einsum("bsq,qd->bsd", out, params["mla/w_o"]), (c_kv, k_pe)
+
+
+def mla_decode(params, spec: MLASpec, x, cache_ckv, cache_kpe, position, impl: str = "naive"):
+    """One-token decode against the latent cache."""
+    B = x.shape[0]
+    H = spec.n_heads
+    pos = jnp.full((B, 1), position, jnp.int32)
+    q_nope, q_pe = _q_proj(params, spec, x, pos)  # (B,1,H,·)
+    c_new, kpe_new = _latent_proj(params, spec, x, pos)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache_ckv, c_new.astype(cache_ckv.dtype), position, axis=1)
+    kpe = jax.lax.dynamic_update_slice_in_dim(cache_kpe, kpe_new.astype(cache_kpe.dtype), position, axis=1)
+    S = ckv.shape[1]
+    valid = (jnp.arange(S) <= position)[None, None, :]
+    scale = 1.0 / jnp.sqrt(jnp.float32(spec.qk_dim))
+
+    if impl == "naive":
+        k_nope, v = _decompress(params, spec, ckv)  # (B,S,H,·) — full decompress
+        s_nope = jnp.einsum("bqhd,bshd->bhs", q_nope, k_nope)
+        s_pe = jnp.einsum("bqhd,bsd->bhs", q_pe, kpe)
+        scores = (s_nope + s_pe).astype(jnp.float32) * scale
+        probs = jax.nn.softmax(jnp.where(valid, scores, NEG_INF), axis=-1)
+        out = jnp.einsum("bhs,bshd->bhd", probs.astype(x.dtype), v)
+    elif impl == "absorbed":
+        w_ukv = params["mla/w_ukv"].reshape(spec.kv_lora, H, spec.d_nope + spec.d_v)
+        w_uk = w_ukv[..., : spec.d_nope]  # (R,H,dn)
+        w_uv = w_ukv[..., spec.d_nope :]  # (R,H,dv)
+        q_lat = jnp.einsum("bqhd,rhd->bhr", q_nope, w_uk)  # absorb into latent
+        s_nope = jnp.einsum("bhr,bsr->bhs", q_lat, ckv)
+        s_pe = jnp.einsum("bqhd,bsd->bhs", q_pe, kpe)
+        scores = (s_nope + s_pe).astype(jnp.float32) * scale
+        probs = jax.nn.softmax(jnp.where(valid, scores, NEG_INF), axis=-1)
+        out_lat = jnp.einsum("bhs,bsr->bhr", probs.astype(x.dtype), ckv)
+        out = jnp.einsum("bhr,rhd->bhd", out_lat, w_uv)
+    else:
+        raise ValueError(impl)
+
+    out = out.reshape(B, 1, H * spec.d_v)
+    return jnp.einsum("bsq,qd->bsd", out, params["mla/w_o"]), ckv, kpe

@@ -1,0 +1,42 @@
+"""Feed-forward blocks: gated (SwiGLU / GeGLU) and plain (GELU) MLPs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACTIVATIONS, Tape
+
+
+def init_gated_mlp(tape: Tape, d_model: int, d_ff: int, name: str = "mlp"):
+    with tape.scope(name):
+        tape.param("w_gate", (d_model, d_ff), ("fsdp", "model"))
+        tape.param("w_up", (d_model, d_ff), ("fsdp", "model"))
+        tape.param("w_down", (d_ff, d_model), ("model", "fsdp"))
+
+
+def gated_mlp(params, x, act: str = "silu", name: str = "mlp"):
+    g = jnp.einsum("bsd,df->bsf", x, params[f"{name}/w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, params[f"{name}/w_up"])
+    h = ACTIVATIONS[act](g) * u
+    return jnp.einsum("bsf,fd->bsd", h, params[f"{name}/w_down"])
+
+
+def init_plain_mlp(tape: Tape, d_model: int, d_ff: int, bias: bool = True, name: str = "mlp"):
+    with tape.scope(name):
+        tape.param("w_in", (d_model, d_ff), ("fsdp", "model"))
+        tape.param("w_out", (d_ff, d_model), ("model", "fsdp"))
+        if bias:
+            tape.param("b_in", (d_ff,), ("model",), init="zeros")
+            tape.param("b_out", (d_model,), (None,), init="zeros")
+
+
+def plain_mlp(params, x, act: str = "gelu", name: str = "mlp"):
+    h = jnp.einsum("bsd,df->bsf", x, params[f"{name}/w_in"])
+    if f"{name}/b_in" in params:
+        h = h + params[f"{name}/b_in"]
+    h = ACTIVATIONS[act](h)
+    y = jnp.einsum("bsf,fd->bsd", h, params[f"{name}/w_out"])
+    if f"{name}/b_out" in params:
+        y = y + params[f"{name}/b_out"]
+    return y

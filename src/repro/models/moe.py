@@ -1,0 +1,149 @@
+"""Mixture-of-experts FFN (DeepSeek-V2 / Moonlight style).
+
+Top-k routed experts + optional always-on shared experts.  Router math in
+fp32 with an auxiliary load-balance loss (Switch-style).
+
+Two dispatch implementations (numerically equivalent up to capacity drops):
+
+  * 'gather'  — capacity-bounded scatter/gather: tokens are placed into an
+    (E, C, d) buffer by their position-in-expert (cumsum over the one-hot
+    assignment), experts run as one batched einsum, results are gathered
+    back with combine weights.  Memory O(E·C·d); the production path.
+  * 'dense'   — every expert runs on every token, masked combine.  O(E·T·d)
+    compute — the small-scale oracle used by tests.
+
+Expert weights are stacked (E, ...) and sharded on the 'model' axis
+(expert parallelism); the gather formulation keeps dispatch local to the
+data shard so GSPMD lowers expert compute without materializing (T,E,C)
+one-hots.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACTIVATIONS, Tape
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    d_ff: int  # per-expert hidden dim
+    n_experts: int
+    top_k: int
+    n_shared: int = 0  # always-on shared experts (same d_ff each)
+    capacity_factor: float = 1.25
+    act: str = "silu"
+
+
+def init_moe(tape: Tape, spec: MoESpec, name: str = "moe"):
+    with tape.scope(name):
+        tape.param("router", (spec.d_model, spec.n_experts), ("fsdp", None), dtype=jnp.float32)
+        tape.param("w_gate", (spec.n_experts, spec.d_model, spec.d_ff), ("model", "fsdp", None))
+        tape.param("w_up", (spec.n_experts, spec.d_model, spec.d_ff), ("model", "fsdp", None))
+        tape.param("w_down", (spec.n_experts, spec.d_ff, spec.d_model), ("model", None, "fsdp"))
+        if spec.n_shared:
+            tape.param("shared_gate", (spec.d_model, spec.n_shared * spec.d_ff), ("fsdp", "model"))
+            tape.param("shared_up", (spec.d_model, spec.n_shared * spec.d_ff), ("fsdp", "model"))
+            tape.param("shared_down", (spec.n_shared * spec.d_ff, spec.d_model), ("model", "fsdp"))
+
+
+def _router(params, spec: MoESpec, x, name: str):
+    """fp32 router: returns (weights (B,S,k), ids (B,S,k), aux_loss)."""
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), params[f"{name}/router"]
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, spec.top_k)
+    weights = weights / jnp.maximum(jnp.sum(weights, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * mean(frac_tokens * frac_probs)
+    one_hot = jax.nn.one_hot(ids[..., 0], spec.n_experts)  # top-1 assignment share
+    frac_tokens = jnp.mean(one_hot, axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = spec.n_experts * jnp.sum(frac_tokens * frac_probs)
+    return weights, ids, aux
+
+
+def _shared_experts(params, spec: MoESpec, x, name: str):
+    g = jnp.einsum("bsd,df->bsf", x, params[f"{name}/shared_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, params[f"{name}/shared_up"])
+    h = ACTIVATIONS[spec.act](g) * u
+    return jnp.einsum("bsf,fd->bsd", h, params[f"{name}/shared_down"])
+
+
+def moe_ffn(params, spec: MoESpec, x, impl: str = "gather", name: str = "moe"):
+    """x: (B,S,d) -> (y: (B,S,d), aux_loss scalar)."""
+    weights, ids, aux = _router(params, spec, x, name)
+    if impl == "dense":
+        y = _dense_dispatch(params, spec, x, weights, ids, name)
+    elif impl == "gather":
+        y = _gather_dispatch(params, spec, x, weights, ids, name)
+    else:
+        raise ValueError(impl)
+    if spec.n_shared:
+        y = y + _shared_experts(params, spec, x, name)
+    return y, aux
+
+
+def _expert_ffn(params, spec: MoESpec, xe, name: str):
+    """xe: (E, C, d) -> (E, C, d), batched over experts."""
+    g = jnp.einsum("ecd,edf->ecf", xe, params[f"{name}/w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, params[f"{name}/w_up"])
+    h = ACTIVATIONS[spec.act](g) * u
+    return jnp.einsum("ecf,efd->ecd", h, params[f"{name}/w_down"])
+
+
+def _dense_dispatch(params, spec: MoESpec, x, weights, ids, name: str):
+    """Oracle: run every expert on every token, combine by routed weight."""
+    B, S, d = x.shape
+    g = jnp.einsum("bsd,edf->bsef", x, params[f"{name}/w_gate"])
+    u = jnp.einsum("bsd,edf->bsef", x, params[f"{name}/w_up"])
+    h = ACTIVATIONS[spec.act](g) * u
+    ye = jnp.einsum("bsef,efd->bsed", h, params[f"{name}/w_down"])  # (B,S,E,d)
+    combine = jnp.zeros((B, S, spec.n_experts), x.dtype)
+    combine = jnp.sum(
+        jax.nn.one_hot(ids, spec.n_experts, dtype=x.dtype) * weights[..., None].astype(x.dtype),
+        axis=2,
+    )
+    return jnp.einsum("bsed,bse->bsd", ye, combine)
+
+
+def _gather_dispatch(params, spec: MoESpec, x, weights, ids, name: str):
+    """Capacity-bounded scatter→batched-einsum→gather (production path)."""
+    B, S, d = x.shape
+    T = B * S
+    k = spec.top_k
+    E = spec.n_experts
+    if S == 1:
+        # decode: no-drop capacity (a token routes to <= k distinct experts,
+        # so T slots per expert is the exact worst case)
+        capacity = T
+    else:
+        capacity = max(1, min(T, int(spec.capacity_factor * T * k / E)))
+
+    xf = x.reshape(T, d)
+    ids_f = ids.reshape(T * k)  # expert id per assignment
+    w_f = weights.reshape(T * k)
+    tok_f = jnp.repeat(jnp.arange(T), k)
+
+    # position of each assignment within its expert (cumsum over one-hot)
+    onehot = jax.nn.one_hot(ids_f, E, dtype=jnp.int32)  # (T·k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)  # (T·k,)
+    keep = pos < capacity
+
+    # scatter tokens into (E, C, d)
+    e_idx = jnp.where(keep, ids_f, E)  # overflow bucket E is dropped
+    p_idx = jnp.where(keep, pos, 0)
+    buf = jnp.zeros((E + 1, capacity, d), x.dtype)
+    buf = buf.at[e_idx, p_idx].add(xf[tok_f])
+    ye = _expert_ffn(params, spec, buf[:E], name)  # (E, C, d)
+
+    # gather back with combine weights
+    y_tok = ye[jnp.where(keep, ids_f, 0), p_idx]  # (T·k, d)
+    y_tok = y_tok * (w_f * keep).astype(x.dtype)[:, None]
+    y = jnp.zeros((T, d), x.dtype).at[tok_f].add(y_tok)
+    return y.reshape(B, S, d)

@@ -1,0 +1,227 @@
+"""Mamba2 block — SSD (state-space duality) form (arXiv:2405.21060).
+
+The selective state space recurrence per head h with state size N:
+
+    H_t = a_t · H_{t-1} + dt_t · B_t ⊗ x_t        H: (P, N)
+    y_t = C_t · H_t + D · x_t                      a_t = exp(dt_t · A)
+
+Training uses the chunked SSD algorithm: the sequence is split into chunks
+of length Q; within a chunk the output is a masked quadratic form (the
+"attention-like" branch, MXU-friendly), states are passed between chunks by
+an associative scan.  `ssd_chunked` is the pure-jnp implementation (also the
+Pallas kernel's oracle); `repro.kernels.ssd_scan` is the TPU kernel.
+
+Decode carries (conv_state, ssm_state) and costs O(P·N) per token — this is
+why the mamba2/zamba2 archs run the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACTIVATIONS, Tape, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def in_dim(self) -> int:
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.n_heads
+
+
+def init_ssm(tape: Tape, spec: SSMSpec, name: str = "ssm"):
+    with tape.scope(name):
+        tape.param("w_in", (spec.d_model, spec.in_dim), ("fsdp", "model"))
+        tape.param("conv_w", (spec.d_conv, spec.conv_dim), (None, "model"))
+        tape.param("conv_b", (spec.conv_dim,), ("model",), init="zeros")
+        tape.param("A_log", (spec.n_heads,), ("model",), init="zeros", dtype=jnp.float32)
+        tape.param("dt_bias", (spec.n_heads,), ("model",), init="zeros", dtype=jnp.float32)
+        tape.param("D", (spec.n_heads,), ("model",), init="ones", dtype=jnp.float32)
+        tape.param("out_norm", (spec.d_inner,), ("model",), init="ones")
+        tape.param("w_out", (spec.d_inner, spec.d_model), ("model", "fsdp"))
+
+
+def _split_in(spec: SSMSpec, zxbcdt):
+    d_in, gn = spec.d_inner, spec.n_groups * spec.d_state
+    z = zxbcdt[..., :d_in]
+    x = zxbcdt[..., d_in : 2 * d_in]
+    Bc = zxbcdt[..., 2 * d_in : 2 * d_in + gn]
+    Cc = zxbcdt[..., 2 * d_in + gn : 2 * d_in + 2 * gn]
+    dt = zxbcdt[..., 2 * d_in + 2 * gn :]
+    return z, x, Bc, Cc, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along seq.  x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def segsum(log_a):
+    """L[i,j] = sum_{k=j+1..i} log_a_k for i>=j else -inf.  log_a: (..., Q)."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., i, j)
+    mask = jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (Bt,S,H,P)  dt: (Bt,S,H)  A: (H,)  B,C: (Bt,S,G,N)  D: (H,)
+    h0: optional initial state (Bt,H,P,N).
+    Returns (y: (Bt,S,H,P), h_final: (Bt,H,P,N)).
+    """
+    Bt, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    Q = chunk
+    S0 = S
+    if S % Q:  # pad to a chunk multiple; dt=0 makes padding exact
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = x.shape[1]
+    nc = S // Q
+    rep = H // G
+
+    xc = x.reshape(Bt, nc, Q, H, P)
+    dtc = dt.reshape(Bt, nc, Q, H).astype(jnp.float32)
+    Bc = jnp.repeat(B.reshape(Bt, nc, Q, G, N), rep, axis=3)  # (Bt,nc,Q,H,N)
+    Cc = jnp.repeat(C.reshape(Bt, nc, Q, G, N), rep, axis=3)
+
+    log_a = dtc * A  # (Bt,nc,Q,H), A negative
+    log_a_h = jnp.moveaxis(log_a, -1, 2)  # (Bt,nc,H,Q)
+    Lmat = jnp.exp(segsum(log_a_h))  # (Bt,nc,H,Q,Q)
+
+    # intra-chunk (the quadratic, attention-like branch)
+    scores = jnp.einsum("bnqhv,bnkhv->bnhqk", Cc, Bc)  # (Bt,nc,H,Q,Q)
+    gated = scores * Lmat * jnp.moveaxis(dtc, -1, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bnhqk,bnkhp->bnqhp", gated.astype(x.dtype), xc)
+
+    # per-chunk terminal states
+    a_tail = jnp.exp(jnp.cumsum(log_a_h[..., ::-1], axis=-1)[..., ::-1] - log_a_h)
+    # a_tail[...,k] = prod_{j>k} a_j
+    wgt = (a_tail * jnp.moveaxis(dtc, -1, 2)).astype(x.dtype)  # (Bt,nc,H,Q)
+    chunk_states = jnp.einsum("bnhk,bnkhv,bnkhp->bnhpv", wgt, Bc, xc)  # (Bt,nc,H,P,N)
+
+    # inter-chunk scan
+    a_chunk = jnp.exp(jnp.sum(log_a_h, axis=-1))  # (Bt,nc,H) total decay per chunk
+    init = jnp.zeros((Bt, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def scan_fn(h, inp):
+        a_c, s_c = inp  # (Bt,H), (Bt,H,P,N)
+        h_in = h
+        h = h * a_c[..., None, None] + s_c.astype(jnp.float32)
+        return h, h_in
+
+    a_sw = jnp.moveaxis(a_chunk, 1, 0)  # (nc,Bt,H)
+    s_sw = jnp.moveaxis(chunk_states, 1, 0)  # (nc,Bt,H,P,N)
+    h_final, h_prevs = jax.lax.scan(scan_fn, init, (a_sw, s_sw))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (Bt,nc,H,P,N) state entering chunk
+
+    # inter-chunk contribution: C_i · (prod_{k<=i} a_k) h_prev
+    a_pref = jnp.exp(jnp.cumsum(log_a_h, axis=-1))  # (Bt,nc,H,Q) prod_{k<=i}
+    y_inter = jnp.einsum(
+        "bnqhv,bnhpv,bnhq->bnqhp", Cc, h_prevs.astype(x.dtype), a_pref.astype(x.dtype)
+    )
+
+    y = y_intra + y_inter + xc * D[None, None, None, :, None].astype(x.dtype)
+    return y.reshape(Bt, S, H, P)[:, :S0], h_final
+
+
+def ssm_full(params, spec: SSMSpec, x, name: str = "ssm", impl: str = "jnp"):
+    """Training / prefill.  Returns (out, (conv_state, ssm_state))."""
+    Bt, S, _ = x.shape
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params[f"{name}/w_in"])
+    z, xs, Bc, Cc, dt_raw = _split_in(spec, zxbcdt)
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_state = xbc[:, -(spec.d_conv - 1) :, :]  # carried for decode
+    xbc = ACTIVATIONS["silu"](_causal_conv(xbc, params[f"{name}/conv_w"], params[f"{name}/conv_b"]))
+    xs = xbc[..., : spec.d_inner]
+    Bc = xbc[..., spec.d_inner : spec.d_inner + spec.n_groups * spec.d_state]
+    Cc = xbc[..., spec.d_inner + spec.n_groups * spec.d_state :]
+
+    H, P, G, N = spec.n_heads, spec.head_dim, spec.n_groups, spec.d_state
+    xh = xs.reshape(Bt, S, H, P)
+    Bh = Bc.reshape(Bt, S, G, N)
+    Ch = Cc.reshape(Bt, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params[f"{name}/dt_bias"])
+    A = -jnp.exp(params[f"{name}/A_log"])
+
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        y, h_final = kops.ssd_scan(xh, dt, A, Bh, Ch, params[f"{name}/D"], chunk=spec.chunk)
+    else:
+        y, h_final = ssd_chunked(xh, dt, A, Bh, Ch, params[f"{name}/D"], spec.chunk)
+
+    y = y.reshape(Bt, S, spec.d_inner)
+    y = y * ACTIVATIONS["silu"](z)
+    y = rms_norm(y, params[f"{name}/out_norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params[f"{name}/w_out"])
+    return out, (conv_state, h_final)
+
+
+def ssm_decode(params, spec: SSMSpec, x, conv_state, ssm_state, name: str = "ssm"):
+    """One-token decode.  conv_state: (B, d_conv-1, conv_dim),
+    ssm_state: (B,H,P,N)."""
+    Bt = x.shape[0]
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params[f"{name}/w_in"])  # (B,1,·)
+    z, xs, Bc, Cc, dt_raw = _split_in(spec, zxbcdt)
+    xbc_new = jnp.concatenate([xs, Bc, Cc], axis=-1)  # (B,1,conv_dim)
+    window = jnp.concatenate([conv_state, xbc_new], axis=1)  # (B,d_conv,·)
+    w = params[f"{name}/conv_w"]
+    conv_out = jnp.sum(window * w[None], axis=1, keepdims=True) + params[f"{name}/conv_b"]
+    xbc = ACTIVATIONS["silu"](conv_out)
+    new_conv_state = window[:, 1:, :]
+
+    xs = xbc[..., : spec.d_inner]
+    Bc = xbc[..., spec.d_inner : spec.d_inner + spec.n_groups * spec.d_state]
+    Cc = xbc[..., spec.d_inner + spec.n_groups * spec.d_state :]
+    H, P, G, N = spec.n_heads, spec.head_dim, spec.n_groups, spec.d_state
+    xh = xs.reshape(Bt, H, P)
+    Bh = jnp.repeat(Bc.reshape(Bt, G, N), H // G, axis=1)
+    Ch = jnp.repeat(Cc.reshape(Bt, G, N), H // G, axis=1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params[f"{name}/dt_bias"])  # (B,H)
+    A = -jnp.exp(params[f"{name}/A_log"])
+    a = jnp.exp(dt * A)  # (B,H)
+
+    h = ssm_state.astype(jnp.float32)
+    h = h * a[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh.astype(jnp.float32), Bh.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), h).astype(x.dtype)
+    y = y + xh * params[f"{name}/D"][None, :, None].astype(x.dtype)
+    y = y.reshape(Bt, 1, spec.d_inner)
+    y = y * ACTIVATIONS["silu"](z)
+    y = rms_norm(y, params[f"{name}/out_norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params[f"{name}/w_out"])
+    return out, new_conv_state, h

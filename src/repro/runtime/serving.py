@@ -1,0 +1,65 @@
+"""Hedged serving: the single-fork policy applied to inference requests.
+
+A batch of decode requests fans out across replicas of the model server;
+the scheduler watches completions and, once the (1-p) quantile has
+finished, hedges the stragglers with r duplicate requests (keep) or
+cancel-and-resend (kill).  This is 'the tail at scale' request hedging with
+the paper's machinery choosing (p, r, keep|kill) from measured latency
+traces instead of hand-tuned timeouts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.adaptive import OnlinePolicyController
+from repro.core.policy import SingleForkPolicy
+
+from .cluster import SimCluster
+from .executor import ExecutionReport, SpeculativeExecutor
+
+
+@dataclasses.dataclass
+class ServeStats:
+    latency: float
+    cost: float
+    p50: float
+    p99: float
+    policy: str
+
+
+class HedgedServer:
+    def __init__(
+        self,
+        cluster: SimCluster,
+        serve_fn: Callable[[object], object],
+        policy: Optional[SingleForkPolicy] = None,
+        adapt: bool = True,
+    ):
+        self.cluster = cluster
+        self.executor = SpeculativeExecutor(cluster)
+        self.serve_fn = serve_fn
+        self.controller = OnlinePolicyController(objective="latency")
+        self._policy = policy or SingleForkPolicy(p=0.05, r=1, keep=True)
+        self.adapt = adapt
+
+    def serve_batch(self, requests: Sequence[object]) -> tuple[list, ServeStats]:
+        tasks = [(lambda r=r: self.serve_fn(r)) for r in requests]
+        report = self.executor.run(tasks, self._policy)
+        for d in report.task_durations:
+            self.controller.record_task_time(d)
+        self.controller.record_job_complete()
+        if self.adapt and self.controller.current_policy().p > 0:
+            self._policy = self.controller.current_policy()
+        finishes = np.array([r.finish_time for r in report.results])
+        stats = ServeStats(
+            latency=report.latency,
+            cost=report.cost,
+            p50=float(np.percentile(finishes, 50)),
+            p99=float(np.percentile(finishes, 99)),
+            policy=self._policy.label(),
+        )
+        return [r.value for r in report.results], stats

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# smoke tests and benches must see ONE device; the 512-device dry-run sets
+# its own XLA_FLAGS in a subprocess (see test_dryrun.py).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

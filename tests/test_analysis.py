@@ -1,0 +1,134 @@
+"""Theorems 1-3, Lemma 1, Corollary 1 vs the Monte-Carlo ground truth."""
+
+import jax
+import math
+import numpy as np
+import pytest
+
+from repro.core import (
+    BASELINE,
+    Pareto,
+    ShiftedExp,
+    SingleForkPolicy,
+    Uniform,
+    baseline_cost,
+    baseline_latency,
+    corollary1_exponent,
+    evt,
+    lemma1_prefer_kill,
+    simulate,
+    theorem1,
+    theorem2_cost,
+    theorem2_latency,
+    theorem3_cost,
+    theorem3_latency,
+)
+
+POLICIES = [
+    SingleForkPolicy(0.1, 1, True),
+    SingleForkPolicy(0.3, 1, False),
+    SingleForkPolicy(0.1, 2, True),
+    SingleForkPolicy(0.3, 2, False),
+]
+
+
+@pytest.mark.parametrize("policy", POLICIES, ids=lambda p: p.label())
+def test_theorem2_matches_simulation(policy):
+    dist = ShiftedExp(1.0, 1.0)
+    n = 400
+    sim = simulate(dist, policy, n, m=4000, key=jax.random.PRNGKey(1))
+    lat = theorem2_latency(dist, policy, n)
+    cost = theorem2_cost(dist, policy, n)
+    assert lat == pytest.approx(sim.mean_latency, rel=0.03)
+    assert cost == pytest.approx(sim.mean_cost, rel=0.02)
+
+
+@pytest.mark.parametrize("policy", POLICIES, ids=lambda p: p.label())
+def test_theorem3_matches_simulation(policy):
+    dist = Pareto(2.0, 2.0)
+    n = 400
+    sim = simulate(dist, policy, n, m=4000, key=jax.random.PRNGKey(1))
+    lat = theorem3_latency(dist, policy, n)
+    cost = theorem3_cost(dist, policy, n)
+    assert lat == pytest.approx(sim.mean_latency, rel=0.06)  # EVT asymptotics
+    assert cost == pytest.approx(sim.mean_cost, rel=0.02)
+
+
+@pytest.mark.parametrize("dist", [ShiftedExp(1.0, 1.0), Pareto(2.0, 2.0)])
+@pytest.mark.parametrize("policy", POLICIES[:2], ids=lambda p: p.label())
+def test_theorem1_general_evaluator(dist, policy):
+    """The family-agnostic quadrature evaluator matches simulation."""
+    n = 400
+    sim = simulate(dist, policy, n, m=4000, key=jax.random.PRNGKey(2))
+    lc = theorem1(dist, policy, n)
+    assert lc.latency == pytest.approx(sim.mean_latency, rel=0.04)
+    assert lc.cost == pytest.approx(sim.mean_cost, rel=0.02)
+
+
+def test_theorem2_paper_erratum():
+    """Paper eq. (11) overstates E[C] by exactly p·Δ (see analysis.py)."""
+    dist = ShiftedExp(1.0, 1.0)
+    pol = SingleForkPolicy(0.2, 1, True)
+    corrected = theorem2_cost(dist, pol)
+    published = theorem2_cost(dist, pol, as_published=True)
+    assert published - corrected == pytest.approx(pol.p * dist.delta)
+    sim = simulate(dist, pol, 400, m=8000, key=jax.random.PRNGKey(3))
+    assert abs(corrected - sim.mean_cost) < abs(published - sim.mean_cost)
+
+
+def test_baseline():
+    dist = ShiftedExp(1.0, 1.0)
+    n = 400
+    sim = simulate(dist, BASELINE, n, m=4000, key=jax.random.PRNGKey(4))
+    assert baseline_latency(dist, n, "evt") == pytest.approx(sim.mean_latency, rel=0.02)
+    assert baseline_cost(dist) == pytest.approx(sim.mean_cost, rel=0.01)
+
+
+def test_lemma1_shifted_exp_prefers_keep():
+    # ShiftedExp with Δ>0 is 'new-longer-than-used' => keep for all p
+    for p in (0.05, 0.2, 0.4):
+        assert lemma1_prefer_kill(ShiftedExp(1.0, 1.0), p) == -1
+
+
+def test_lemma1_memoryless_boundary():
+    # Δ=0 (pure exponential, memoryless): keep and kill coincide
+    assert lemma1_prefer_kill(ShiftedExp(0.0, 1.0), 0.2) in (0, -1, 1)
+    d = ShiftedExp(0.0, 1.0)
+    pk = simulate(d, SingleForkPolicy(0.2, 1, True), 200, m=4000, key=jax.random.PRNGKey(5))
+    pl = simulate(d, SingleForkPolicy(0.2, 1, False), 200, m=4000, key=jax.random.PRNGKey(5))
+    assert pk.mean_latency == pytest.approx(pl.mean_latency, rel=0.05)
+
+
+def test_corollary1_scaling():
+    """E[T] = Θ(n^{1/(α(r+1))}): fitted log-log slope matches the exponent."""
+    dist = Pareto(2.0, 2.0)
+    pol = SingleForkPolicy(0.2, 1, False)
+    ns = [200, 400, 800, 1600]
+    lats = [theorem3_latency(dist, pol, n) - 0.0 for n in ns]
+    # subtract the n-independent first term to isolate the growth term
+    first = 2.0 * 0.2 ** (-1 / 2.0)
+    growth = np.array(lats) - first
+    slope = np.polyfit(np.log(ns), np.log(growth), 1)[0]
+    assert slope == pytest.approx(corollary1_exponent(2.0, 1), abs=0.02)
+
+
+def test_evt_lemma2_constants():
+    assert evt.expected_extreme_value(evt.Domain.GUMBEL) == pytest.approx(0.5772, abs=1e-3)
+    assert evt.expected_extreme_value(evt.Domain.FRECHET, 2.0) == pytest.approx(
+        math.gamma(0.5), rel=1e-6
+    )
+    assert evt.expected_extreme_value(evt.Domain.FRECHET, 0.9) == float("inf")
+    assert evt.expected_extreme_value(evt.Domain.WEIBULL, 1.0) == pytest.approx(-1.0)
+
+
+def test_evt_expected_max_uniform():
+    # max of n U(0,1) has mean n/(n+1); reversed-Weibull EVT should be close
+    d = Uniform(0.0, 1.0)
+    approx = evt.expected_max(d, 100)
+    assert approx == pytest.approx(100 / 101, abs=0.01)
+
+
+def test_evt_domains():
+    assert evt.classify(ShiftedExp(1, 1)).domain is evt.Domain.GUMBEL
+    assert evt.classify(Pareto(2, 1)).domain is evt.Domain.FRECHET
+    assert evt.classify(Uniform(0, 1)).domain is evt.Domain.WEIBULL

@@ -1,0 +1,128 @@
+"""Algorithm 1 (bootstrap estimator) vs exact simulation on empirical
+distributions + Theorem 4 error-scaling checks."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    BASELINE,
+    Empirical,
+    ResidualDistribution,
+    SingleForkPolicy,
+    estimate,
+    residual_tail_grid,
+    simulate,
+)
+from repro.data import synthesize_trace
+
+
+def _trace():
+    rng = np.random.default_rng(0)
+    return np.concatenate([rng.exponential(100, 950) + 50, rng.pareto(1.5, 50) * 400 + 200])
+
+
+POLICIES = [
+    SingleForkPolicy(0.1, 1, True),
+    SingleForkPolicy(0.1, 1, False),
+    SingleForkPolicy(0.05, 2, True),
+    SingleForkPolicy(0.3, 3, False),
+]
+
+
+@pytest.mark.parametrize("policy", POLICIES, ids=lambda p: p.label())
+def test_algorithm1_matches_simulation(policy):
+    trace = _trace()
+    emp = Empirical(trace)
+    est = estimate(trace, policy, m=800, key=jax.random.PRNGKey(1))
+    sim = simulate(emp, policy, len(trace), m=800, key=jax.random.PRNGKey(2))
+    assert est.latency == pytest.approx(sim.mean_latency, rel=0.08)
+    assert est.cost == pytest.approx(sim.mean_cost, rel=0.03)
+
+
+def test_algorithm1_baseline():
+    trace = _trace()
+    est = estimate(trace, BASELINE, m=500)
+    emp = Empirical(trace)
+    sim = simulate(emp, BASELINE, len(trace), m=500, key=jax.random.PRNGKey(3))
+    assert est.latency == pytest.approx(sim.mean_latency, rel=0.08)
+    assert est.cost == pytest.approx(sim.mean_cost, rel=0.02)
+
+
+def test_residual_grid_matches_formula():
+    """Tabulated F̄_Y equals eq. (7) applied to the empirical tail."""
+    trace = np.sort(_trace())
+    pol = SingleForkPolicy(0.2, 2, False)
+    ys, tail = residual_tail_grid(trace, pol)
+    n = len(trace)
+    for yi in (0.0, 50.0, 200.0, 1000.0):
+        emp_tail = np.sum(trace > yi) / n
+        idx = np.searchsorted(np.asarray(ys), yi)
+        if idx < len(ys):
+            assert float(tail[idx]) == pytest.approx(emp_tail ** 3, abs=0.02)
+
+
+def test_stderr_shrinks_with_m():
+    """Theorem 4: estimator stderr ~ O(1/sqrt(m))."""
+    trace = _trace()
+    pol = SingleForkPolicy(0.1, 1, True)
+    e_small = estimate(trace, pol, m=100, key=jax.random.PRNGKey(5))
+    e_big = estimate(trace, pol, m=1600, key=jax.random.PRNGKey(5))
+    assert e_big.cost_stderr < e_small.cost_stderr
+    assert e_big.latency_stderr < e_small.latency_stderr
+    # ratio should be about sqrt(16) = 4
+    assert e_small.cost_stderr / e_big.cost_stderr == pytest.approx(4.0, rel=0.5)
+
+
+def test_trace_qualitative_claims():
+    """§4.2 on the synthesized traces (see EXPERIMENTS.md §Repro):
+    * job1/job2: small-p keep-replication reduces BOTH E[T] and E[C];
+    * job3: big latency cut at (statistically) neutral cost;
+    * job3: killing is 'too impatient' — for some p it increases latency
+      relative to keeping (paper Fig. 10);
+    * keep's trade-off curve dominates kill's: keep(p, r+1) beats kill(p, r)
+      on latency at comparable cost (the operational reading of 'it is
+      better to replicate while keeping the original')."""
+    import jax
+
+    for job in ("job1", "job2"):
+        trace = synthesize_trace(job)
+        base = estimate(trace, BASELINE, m=500, key=jax.random.PRNGKey(7))
+        keep = estimate(trace, SingleForkPolicy(0.03, 1, True), m=500, key=jax.random.PRNGKey(7))
+        assert keep.latency < 0.9 * base.latency, job
+        assert keep.cost < base.cost, job
+
+    job3 = synthesize_trace("job3")
+    base3 = estimate(job3, BASELINE, m=500, key=jax.random.PRNGKey(7))
+    keep3 = estimate(job3, SingleForkPolicy(0.05, 1, True), m=500, key=jax.random.PRNGKey(7))
+    assert keep3.latency < 0.7 * base3.latency
+    assert keep3.cost < 1.01 * base3.cost  # cost-neutral
+
+    hurts = []
+    for p in (0.2, 0.3, 0.4):
+        k = estimate(job3, SingleForkPolicy(p, 1, True), m=500, key=jax.random.PRNGKey(7))
+        ki = estimate(job3, SingleForkPolicy(p, 1, False), m=500, key=jax.random.PRNGKey(7))
+        hurts.append(ki.latency > k.latency)
+    assert any(hurts)  # killing increases latency somewhere on the sweep
+
+    for job in ("job1", "job2", "job3"):
+        trace = synthesize_trace(job)
+        for r in (1, 2):
+            kp = estimate(trace, SingleForkPolicy(0.1, r + 1, True), m=500, key=jax.random.PRNGKey(7))
+            kl = estimate(trace, SingleForkPolicy(0.1, r, False), m=500, key=jax.random.PRNGKey(7))
+            assert kp.latency <= 1.01 * kl.latency, (job, r)
+            assert kp.cost <= 1.01 * kl.cost, (job, r)
+
+
+def test_residual_distribution_tail_monotone():
+    from repro.core import ShiftedExp
+
+    res = ResidualDistribution(ShiftedExp(1.0, 1.0), SingleForkPolicy(0.2, 2, True))
+    ys = np.linspace(0, 10, 200)
+    tails = np.asarray(res.tail(ys))
+    assert np.all(np.diff(tails) <= 1e-6)
+    assert tails[0] == pytest.approx(1.0)
+    # quantile inverts tail
+    for u in (0.1, 0.5, 0.9):
+        y = float(res.quantile(u))
+        assert float(res.tail(y)) == pytest.approx(1 - u, abs=0.02)

@@ -1,0 +1,58 @@
+"""Checkpoint: round-trip (incl. bf16 bitcast), atomicity, retention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {
+            "w": jax.random.normal(k, (8, 16), jnp.bfloat16),
+            "b": jnp.arange(16, dtype=jnp.float32),
+        },
+        "opt": {"m": jnp.ones((8, 16), jnp.float32)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip_bitexact(tmp_path):
+    state = _state()
+    ckpt.save(tmp_path, state, step=7)
+    like = jax.tree.map(jnp.zeros_like, state)
+    restored = ckpt.restore(tmp_path, like)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )
+
+
+def test_latest_and_retention(tmp_path):
+    state = _state()
+    for step in (1, 2, 3, 4, 5):
+        ckpt.save(tmp_path, state, step=step, keep=2)
+    assert ckpt.latest_step(tmp_path) == 5
+    assert ckpt.all_steps(tmp_path) == [4, 5]
+
+
+def test_atomicity_tmpdirs_cleaned(tmp_path):
+    state = _state()
+    ckpt.save(tmp_path, state, step=1)
+    leftovers = [p for p in tmp_path.iterdir() if p.name.startswith(".tmp")]
+    assert not leftovers
+
+
+def test_restore_missing_key_fails(tmp_path):
+    ckpt.save(tmp_path, {"a": jnp.ones(3)}, step=1)
+    with pytest.raises(KeyError):
+        ckpt.restore(tmp_path, {"a": jnp.ones(3), "b": jnp.ones(2)})
+
+
+def test_restore_without_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(tmp_path / "empty", {"a": jnp.ones(1)})

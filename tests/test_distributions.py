@@ -1,0 +1,76 @@
+"""Distribution quintet correctness + hypothesis round-trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Empirical, Pareto, ShiftedExp, Uniform, Weibull
+
+DISTS = [
+    ShiftedExp(1.0, 1.0),
+    ShiftedExp(0.5, 2.0),
+    Pareto(2.0, 2.0),
+    Pareto(3.0, 1.0),
+    Uniform(1.0, 3.0),
+    Weibull(1.5, 2.0),
+]
+
+
+@pytest.mark.parametrize("dist", DISTS, ids=lambda d: type(d).__name__ + str(d.support()[0]))
+def test_quantile_tail_roundtrip(dist):
+    us = np.linspace(0.01, 0.99, 37)
+    xs = dist.quantile(us)
+    tails = dist.tail(xs)
+    np.testing.assert_allclose(np.asarray(tails), 1.0 - us, atol=2e-5)
+
+
+@pytest.mark.parametrize("dist", DISTS, ids=lambda d: type(d).__name__ + str(d.support()[0]))
+def test_sample_mean_matches(dist, rng_key):
+    x = dist.sample(rng_key, (200_000,))
+    mean = float(dist.mean())
+    if np.isfinite(mean):
+        # Pareto(2) has infinite variance; loose tolerance
+        rtol = 0.15 if isinstance(dist, Pareto) and dist.alpha <= 2.5 else 0.02
+        np.testing.assert_allclose(float(jnp.mean(x)), mean, rtol=rtol)
+
+
+@given(
+    delta=st.floats(0.0, 5.0),
+    mu=st.floats(0.1, 5.0),
+    u=st.floats(0.001, 0.999),
+)
+@settings(max_examples=50, deadline=None)
+def test_shifted_exp_quantile_property(delta, mu, u):
+    d = ShiftedExp(delta, mu)
+    x = float(d.quantile(u))
+    assert x >= delta - 1e-5
+    assert abs(float(d.cdf(x)) - u) < 1e-4
+
+
+@given(alpha=st.floats(1.1, 6.0), xm=st.floats(0.1, 10.0), u=st.floats(0.001, 0.99))
+@settings(max_examples=50, deadline=None)
+def test_pareto_quantile_property(alpha, xm, u):
+    d = Pareto(alpha, xm)
+    x = float(d.quantile(u))
+    assert x >= xm * (1 - 1e-6)
+    assert abs(float(d.tail(x)) - (1 - u)) < 1e-4
+
+
+def test_empirical_matches_sample():
+    samples = np.array([1.0, 2.0, 2.0, 5.0, 10.0])
+    emp = Empirical(samples)
+    assert float(emp.tail(0.5)) == 1.0
+    assert float(emp.tail(2.0)) == pytest.approx(2 / 5)  # strictly greater
+    assert float(emp.tail(10.0)) == 0.0
+    assert float(emp.quantile(0.2)) == 1.0
+    assert float(emp.quantile(1.0)) == 10.0
+    assert float(emp.mean()) == pytest.approx(4.0)
+
+
+def test_empirical_bootstrap_sampling(rng_key):
+    samples = np.arange(1, 101, dtype=np.float64)
+    emp = Empirical(samples)
+    draws = emp.sample(rng_key, (50_000,))
+    np.testing.assert_allclose(float(jnp.mean(draws)), 50.5, rtol=0.02)

@@ -1,0 +1,58 @@
+"""Policy optimization (§4.3): constraint satisfaction + improvement."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Pareto,
+    ShiftedExp,
+    analytic_evaluator,
+    bootstrap_evaluator,
+    optimize_cost_sensitive,
+    optimize_latency_sensitive,
+    tradeoff_curve,
+)
+
+P_GRID = np.arange(0.05, 0.45, 0.05)
+
+
+def test_latency_sensitive_respects_budget():
+    ev = analytic_evaluator(Pareto(2.0, 2.0), 400)
+    best, base = optimize_latency_sensitive(ev, r_max=3, p_grid=P_GRID)
+    assert best.cost <= base.cost * 1.0 + 1e-6
+    assert best.latency < 0.5 * base.latency  # Pareto tail: huge win available
+
+
+def test_cost_sensitive_improves_objective():
+    lam, n = 0.1, 400
+    ev = analytic_evaluator(Pareto(2.0, 2.0), n)
+    best, base = optimize_cost_sensitive(ev, lam=lam, n=n, r_max=3, p_grid=P_GRID)
+    assert best.latency + lam * n * best.cost <= base.latency + lam * n * base.cost
+
+
+def test_shifted_exp_prefers_keep():
+    """'New-longer-than-used' => optimizer should land on keep (Lemma 1)."""
+    ev = analytic_evaluator(ShiftedExp(1.0, 1.0), 400)
+    best, _ = optimize_latency_sensitive(ev, r_max=2, p_grid=P_GRID)
+    assert best.policy.p == 0 or best.policy.keep
+
+
+def test_bootstrap_evaluator_table1_shape():
+    """Trace-driven optimization beats the baseline on both formulations
+    (the Table 1 pattern)."""
+    rng = np.random.default_rng(0)
+    trace = np.concatenate([rng.exponential(100, 500) + 50, rng.pareto(1.2, 30) * 500 + 300])
+    ev = bootstrap_evaluator(trace, m=200)
+    best_l, base = optimize_latency_sensitive(ev, r_max=4, p_grid=np.arange(0.05, 0.45, 0.1))
+    assert best_l.latency < base.latency
+    best_c, _ = optimize_cost_sensitive(ev, lam=0.1, n=len(trace), r_max=4,
+                                        p_grid=np.arange(0.05, 0.45, 0.1))
+    assert best_c.cost <= base.cost * 1.02
+
+
+def test_tradeoff_curve_monotone_cost_in_p_kill():
+    """π_kill on ShiftedExp: cost increases linearly in p (Theorem 2)."""
+    ev = analytic_evaluator(ShiftedExp(1.0, 1.0), 400)
+    curve = tradeoff_curve(ev, r=1, keep=False, p_grid=np.arange(0.05, 0.5, 0.05))
+    costs = [c.cost for c in curve]
+    assert all(a < b for a, b in zip(costs, costs[1:]))

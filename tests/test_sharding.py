@@ -1,0 +1,94 @@
+"""Sharding-rule resolution + an 8-device subprocess mini dry-run (the
+production-mesh path is exercised by launch/dryrun.py; this keeps CI fast)."""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.launch import sharding as shd
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+class FakeMesh:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_resolve_divisibility_fallback():
+    mesh = FakeMesh()
+    rules = {"model": ("model",), "fsdp": ("pod", "data"), "batch": ("pod", "data")}
+    # divisible -> sharded
+    assert shd.resolve_spec(("fsdp", "model"), (64, 160), mesh, rules) == shd.P(("pod", "data"), "model")
+    # 8 heads on a 16-way axis -> replicated (gemma case)
+    assert shd.resolve_spec(("model",), (8,), mesh, rules)[0] is None
+    # 56 heads (llava) not divisible by 16 -> replicated
+    assert shd.resolve_spec((None, "model"), (10, 56), mesh, rules)[1] is None
+    # batch 1 (long_500k) -> replicated
+    assert shd.resolve_spec(("batch",), (1,), mesh, rules)[0] is None
+
+
+def test_serve_stationary_drops_fsdp():
+    mesh = FakeMesh()
+    r = shd.rules_train.__wrapped__(mesh) if hasattr(shd.rules_train, "__wrapped__") else None
+    # direct: stationary rules replicate 'fsdp'
+    rules = {"batch": ("pod", "data"), "fsdp": ("pod", "data"), "model": ("model",)}
+    stat = dict(rules, fsdp=None)
+    assert shd.resolve_spec(("fsdp",), (64,), mesh, stat)[0] is None
+
+
+_SUBPROCESS_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    from repro.configs import get_reduced
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.shapes import ShapeSpec
+    from repro.launch.steps import plan_train, plan_decode
+
+    results = {}
+    for arch in ("qwen3-32b", "deepseek-v2-236b", "mamba2-2.7b", "whisper-small", "zamba2-1.2b"):
+        cfg = get_reduced(arch).replace(vocab=512)
+        for multi in (False, True):
+            mesh = make_test_mesh(multi_pod=multi)
+            shape = ShapeSpec("t", seq_len=32, global_batch=8, kind="train")
+            fn, in_sh, out_sh, inputs = plan_train(cfg, shape, mesh)
+            c = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*inputs).compile()
+            ca = c.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            results[f"{arch}|{multi}"] = float(ca["flops"])
+    # decode plan on one arch
+    mesh = make_test_mesh(multi_pod=True)
+    cfg = get_reduced("qwen3-32b").replace(vocab=512)
+    shape = ShapeSpec("d", seq_len=64, global_batch=8, kind="decode")
+    fn, in_sh, out_sh, inputs = plan_decode(cfg, shape, mesh)
+    jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*inputs).compile()
+    results["decode_ok"] = 1
+    print(json.dumps(results))
+    """
+)
+
+
+@pytest.mark.slow
+def test_mini_dryrun_8_devices():
+    """Reduced configs lower+compile on 2x4 and 2x2x2 meshes in a subprocess
+    (fresh jax so the forced device count applies)."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT],
+        capture_output=True,
+        text=True,
+        cwd=REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    results = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert results["decode_ok"] == 1
+    assert all(v > 0 for v in results.values())
