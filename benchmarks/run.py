@@ -12,6 +12,7 @@ import traceback
 from . import (
     bench_fig3_fig5,
     bench_fig4_fig6,
+    bench_fleet,
     bench_kernels,
     bench_roofline,
     bench_runtime,
@@ -29,6 +30,7 @@ BENCHES = {
     "scaling": bench_scaling,  # Corollary 1 growth exponents
     "kernels": bench_kernels,  # Pallas kernels + Algorithm 1 throughput
     "runtime": bench_runtime,  # trainer/serving economics
+    "fleet": bench_fleet,  # multi-job finite-capacity frontier
     "roofline": bench_roofline,  # dry-run roofline summary
 }
 

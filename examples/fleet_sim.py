@@ -1,0 +1,74 @@
+"""Fleet-scale straggler replication: 1000 jobs on a finite worker pool.
+
+    PYTHONPATH=src python examples/fleet_sim.py
+
+The single-job analysis says more replication = less latency.  Under
+queueing it stops being true: replicas consume the same slots arriving
+jobs need, so "naive full replication" (kill-and-relaunch nearly every
+task with 3 copies) inflates per-job cost E[C], pushes the offered load
+ρ = λ·n·E[C]/capacity past 1, and the queue — hence every latency
+percentile — collapses.  A small-p single fork (the paper's answer) cuts
+the straggler tail at ~2% extra cost and stays comfortably stable.
+
+Also shown: the vectorized fast path sweeping the whole λ grid for the
+small-p policy in a fraction of the event engine's time.
+"""
+
+import time
+
+from repro.core import ShiftedExp, SingleForkPolicy
+from repro.fleet import FleetConfig, FleetSim, poisson_workload, vector
+
+DIST = ShiftedExp(1.0, 1.0)  # task times: 1s floor + Exp(1) tail
+N_TASKS = 20  # tasks per job (gang-scheduled)
+CAPACITY = 60  # worker slots shared by everyone
+N_JOBS = 1000
+LAM = 0.75  # job arrivals per second
+
+POLICIES = (
+    ("baseline (no replication)", SingleForkPolicy(0.0, 0, True)),
+    ("small-p fork pi_keep(0.05,1)", SingleForkPolicy(0.05, 1, True)),
+    ("naive full replication pi_kill(0.9,2)", SingleForkPolicy(0.9, 2, False)),
+)
+
+print(f"{N_JOBS} jobs x {N_TASKS} tasks, capacity {CAPACITY}, lambda={LAM}/s\n")
+print(f"{'policy':40s} {'E[sojourn]':>10s} {'p99':>8s} {'E[C]':>6s} {'util':>5s} {'wait':>7s}")
+results = {}
+for label, policy in POLICIES:
+    jobs = poisson_workload(N_JOBS, rate=LAM, n_tasks=N_TASKS, dist=DIST, seed=11)
+    report = FleetSim(FleetConfig(capacity=CAPACITY, policy=policy, seed=11)).run(jobs)
+    s = report.stats
+    results[label] = s
+    print(
+        f"{label:40s} {s.mean_sojourn:10.2f} {s.p99_sojourn:8.1f} "
+        f"{s.mean_cost:6.2f} {s.utilization:5.2f} {s.mean_wait:7.2f}"
+    )
+
+base = results[POLICIES[0][0]]
+smart = results[POLICIES[1][0]]
+naive = results[POLICIES[2][0]]
+assert smart.p99_sojourn < base.p99_sojourn, "small-p fork should cut the p99 tail"
+assert naive.mean_sojourn > 2 * smart.mean_sojourn, (
+    "naive full replication should collapse under queueing"
+)
+rho_base = LAM * N_TASKS * base.mean_cost / CAPACITY
+rho_naive = LAM * N_TASKS * naive.mean_cost / CAPACITY
+print(
+    f"\nnaive replication inflates E[C] {naive.mean_cost / base.mean_cost:.1f}x, "
+    f"offered load {rho_base:.2f} -> {rho_naive:.2f}: replicas crowd out gang\n"
+    f"admissions (jobs need {N_TASKS} free slots at once) and queueing delay collapses;"
+    f"\nsmall-p forking pays {100 * (smart.mean_cost / base.mean_cost - 1):.1f}% extra cost "
+    f"for a {100 * (1 - smart.p99_sojourn / base.p99_sojourn):.0f}% lower p99."
+)
+
+# -- vectorized λ sweep (dedicated-capacity regime) -------------------------
+lams = [0.05, 0.1, 0.15, 0.2, 0.25]
+t0 = time.time()
+rows = vector.sweep(DIST, [POLICIES[1][1]], lams, n=N_TASKS, n_jobs=N_JOBS, m_trials=16)
+dt = time.time() - t0
+print(f"\nvectorized lambda sweep (capacity=n regime), {dt:.2f}s for {len(rows)} cells:")
+for r in rows:
+    print(
+        f"  lambda={r['lam']:.2f}  E[sojourn]={r['mean_sojourn']:6.2f}  "
+        f"p99={r['p99']:6.1f}  util={r['utilization']:.2f}"
+    )

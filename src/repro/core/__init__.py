@@ -23,7 +23,13 @@ from .analysis import (  # noqa: F401
     theorem3_cost,
     theorem3_latency,
 )
-from .simulate import SimResult, simulate, simulate_multifork  # noqa: F401
+from .simulate import (  # noqa: F401
+    SimResult,
+    simulate,
+    simulate_multifork,
+    single_fork_batch,
+    single_fork_trial,
+)
 from .bootstrap import BootstrapEstimate, estimate, residual_tail_grid  # noqa: F401
 from .optimize import (  # noqa: F401
     PolicyEvaluation,

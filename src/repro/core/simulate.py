@@ -28,7 +28,13 @@ import jax.numpy as jnp
 from .distributions import Distribution
 from .policy import MultiForkPolicy, SingleForkPolicy, num_stragglers
 
-__all__ = ["SimResult", "simulate", "simulate_multifork"]
+__all__ = [
+    "SimResult",
+    "simulate",
+    "simulate_multifork",
+    "single_fork_batch",
+    "single_fork_trial",
+]
 
 
 @dataclasses.dataclass
@@ -55,39 +61,52 @@ class SimResult:
         return float(jnp.std(self.cost) / jnp.sqrt(m))
 
 
-def _single_trial(key, dist: Distribution, n: int, s: int, r: int, keep: bool):
+def single_fork_batch(key, dist: Distribution, n: int, s: int, r: int, keep: bool, shape=()):
+    """(T, C) for a `shape`-batch of independent jobs under π(p, r, keep)
+    with s = pn stragglers.
+
+    All randomness is drawn in two bulk calls, so batching costs no extra
+    threefry invocations — this is the shared implementation behind both
+    `simulate` here and the fleet fast path (`repro.fleet.vector`).
+    (n, s, r, keep, shape) must be static under jit.
+    """
     kx, ky = jax.random.split(key)
-    x = dist.sample(kx, (n,))
-    x_sorted = jnp.sort(x)
+    x_sorted = jnp.sort(dist.sample(kx, shape + (n,)), axis=-1)
     k = n - s
     if s == 0:
-        return x_sorted[-1], jnp.sum(x_sorted) / n
+        return x_sorted[..., -1], jnp.sum(x_sorted, axis=-1) / n
 
-    t1 = x_sorted[k - 1]
-    finished_cost = jnp.sum(jnp.where(jnp.arange(n) < k, x_sorted, 0.0))
+    t1 = x_sorted[..., k - 1]
+    finished_cost = jnp.sum(jnp.where(jnp.arange(n) < k, x_sorted, 0.0), axis=-1)
     c1 = finished_cost + s * t1
 
-    stragglers = x_sorted[k:]  # the s largest original times (> t1)
-    fresh = dist.sample(ky, (s, r + 1))
+    stragglers = x_sorted[..., k:]  # the s largest original times (> t1)
+    fresh = dist.sample(ky, shape + (s, r + 1))
     if keep:
-        remaining = stragglers - t1
+        remaining = stragglers - t1[..., None]
         if r > 0:
-            y = jnp.minimum(remaining, jnp.min(fresh[:, :r], axis=1))
+            y = jnp.minimum(remaining, jnp.min(fresh[..., :r], axis=-1))
         else:
             y = remaining
     else:
-        y = jnp.min(fresh, axis=1)
+        y = jnp.min(fresh, axis=-1)
 
-    latency = t1 + jnp.max(y)
-    cost = (c1 + (r + 1) * jnp.sum(y)) / n
+    latency = t1 + jnp.max(y, axis=-1)
+    cost = (c1 + (r + 1) * jnp.sum(y, axis=-1)) / n
     return latency, cost
+
+
+def single_fork_trial(key, dist: Distribution, n: int, s: int, r: int, keep: bool):
+    """One job's (T, C) — `single_fork_batch` with an empty batch shape
+    (identical draws per key, so the two are interchangeable)."""
+    return single_fork_batch(key, dist, n, s, r, keep, shape=())
 
 
 @partial(jax.jit, static_argnames=("dist", "policy", "n", "m"))
 def _simulate_jit(key, dist, policy, n, m):
     s = num_stragglers(n, policy.p)
     keys = jax.random.split(key, m)
-    lat, cost = jax.vmap(lambda k: _single_trial(k, dist, n, s, policy.r, policy.keep))(keys)
+    lat, cost = jax.vmap(lambda k: single_fork_trial(k, dist, n, s, policy.r, policy.keep))(keys)
     return lat, cost
 
 

@@ -1,0 +1,21 @@
+# Multi-job, finite-capacity fleet simulation (DESIGN.md §9).
+#
+# The paper analyzes one job on an unbounded pool; this subsystem puts the
+# single-/multi-fork policies in a production regime: jobs arrive over time,
+# compete for a finite worker pool, queue behind each other, and a
+# replication decision for one job delays everything behind it.  Two paths:
+#   * `FleetSim` — exact event-heap discrete-event engine (events.py,
+#     scheduler.py), any admission discipline / preemption / relaunch delay;
+#   * `repro.fleet.vector` — vmapped many-trial JAX rollouts for the
+#     dedicated-capacity (serial-admission) regime, for policy sweeps.
+from .events import Event, EventHeap  # noqa: F401
+from .workload import (  # noqa: F401
+    Job,
+    bursty_workload,
+    poisson_workload,
+    trace_workload,
+)
+from .scheduler import FleetScheduler, JobRecord  # noqa: F401
+from .metrics import FleetStats, compute_stats  # noqa: F401
+from .fleet import FleetConfig, FleetReport, FleetSim, run_fleet  # noqa: F401
+from . import vector  # noqa: F401

@@ -1,0 +1,77 @@
+"""Event-heap core of the discrete-event fleet engine.
+
+A plain binary heap of (time, seq, Event) with two properties the scheduler
+relies on:
+
+  * deterministic total order — ties in time break by insertion sequence
+    (FIFO), so a fleet run is reproducible given the workload seed;
+  * O(1) lazy cancellation — cancelling a copy marks its finish event dead;
+    dead events are skipped at pop time instead of being removed from the
+    middle of the heap (the classic priority-queue-with-delete idiom).
+
+The engine is deliberately tiny: `kind` is a free-form string and `data` an
+arbitrary payload, so scheduler.py owns all semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Optional
+
+__all__ = ["Event", "EventHeap"]
+
+
+@dataclasses.dataclass
+class Event:
+    time: float
+    seq: int  # insertion order; breaks time ties FIFO
+    kind: str
+    data: Any = None
+    cancelled: bool = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+
+class EventHeap:
+    def __init__(self) -> None:
+        self._heap: list[tuple[float, int, Event]] = []
+        self._seq = 0
+        self._live = 0
+
+    def __len__(self) -> int:
+        return self._live
+
+    def __bool__(self) -> bool:
+        return self._live > 0
+
+    def push(self, time: float, kind: str, data: Any = None) -> Event:
+        if time < 0 or time != time:  # negative or NaN
+            raise ValueError(f"bad event time {time!r}")
+        ev = Event(time=float(time), seq=self._seq, kind=kind, data=data)
+        self._seq += 1
+        self._live += 1
+        heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+        return ev
+
+    def cancel(self, ev: Event) -> None:
+        """Lazy-delete: the event stays heaped but will be skipped."""
+        if not ev.cancelled:
+            ev.cancel()
+            self._live -= 1
+
+    def pop(self) -> Optional[Event]:
+        """Next live event in (time, seq) order; None when drained."""
+        while self._heap:
+            _, _, ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            self._live -= 1
+            return ev
+        return None
+
+    def peek_time(self) -> Optional[float]:
+        while self._heap and self._heap[0][2].cancelled:
+            heapq.heappop(self._heap)
+        return self._heap[0][0] if self._heap else None

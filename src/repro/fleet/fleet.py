@@ -1,0 +1,92 @@
+"""Top-level fleet façade: workload -> scheduler -> metrics in one call.
+
+    from repro.core import ShiftedExp, SingleForkPolicy
+    from repro.fleet import FleetConfig, FleetSim, poisson_workload
+
+    jobs = poisson_workload(1000, rate=0.3, n_tasks=20, dist=ShiftedExp(1, 1))
+    report = FleetSim(FleetConfig(capacity=20,
+                                  policy=SingleForkPolicy(0.1, 1))).run(jobs)
+    print(report.stats.row())
+
+`FleetConfig.adapt=True` swaps the fixed policy for an online controller
+(paper §5.2): jobs without a pinned policy use whatever Algorithm 1 + §4.3
+currently recommend from the fleet's own completed-task telemetry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.adaptive import OnlinePolicyController
+from repro.core.policy import BASELINE, SingleForkPolicy
+
+from .metrics import FleetStats, compute_stats
+from .scheduler import FleetScheduler, JobRecord
+from .workload import Job
+
+__all__ = ["FleetConfig", "FleetReport", "FleetSim", "run_fleet"]
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    capacity: int
+    policy: SingleForkPolicy = BASELINE  # default for jobs with policy=None
+    discipline: str = "fifo"  # or "priority"
+    relaunch_delay: float = 0.0  # delayed-relaunch knob
+    preempt_replicas: bool = False  # cancel speculation to admit queued work
+    fork_overhead: float = 0.0  # per-replica launch latency
+    adapt: bool = False  # learn the policy online
+    objective: str = "latency"  # controller objective when adapt=True
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class FleetReport:
+    records: list[JobRecord]
+    stats: FleetStats
+    capacity: int
+    max_busy: int  # peak concurrently-busy slots (conservation witness)
+    busy_time: float
+    controller: Optional[OnlinePolicyController] = None
+
+    @property
+    def final_policy(self) -> Optional[str]:
+        return self.controller.current_policy().label() if self.controller else None
+
+
+class FleetSim:
+    def __init__(self, config: FleetConfig):
+        self.config = config
+        self.controller = (
+            OnlinePolicyController(objective=config.objective, seed=config.seed)
+            if config.adapt
+            else None
+        )
+
+    def run(self, jobs: Sequence[Job]) -> FleetReport:
+        cfg = self.config
+        sched = FleetScheduler(
+            capacity=cfg.capacity,
+            default_policy=cfg.policy,
+            discipline=cfg.discipline,
+            relaunch_delay=cfg.relaunch_delay,
+            preempt_replicas=cfg.preempt_replicas,
+            fork_overhead=cfg.fork_overhead,
+            controller=self.controller,
+            seed=cfg.seed,
+        )
+        records = sched.run(jobs)
+        stats = compute_stats(records, cfg.capacity, sched.busy_time)
+        return FleetReport(
+            records=records,
+            stats=stats,
+            capacity=cfg.capacity,
+            max_busy=sched.max_busy,
+            busy_time=sched.busy_time,
+            controller=self.controller,
+        )
+
+
+def run_fleet(jobs: Sequence[Job], config: FleetConfig) -> FleetReport:
+    return FleetSim(config).run(jobs)

@@ -1,0 +1,86 @@
+"""Fleet-level metrics over per-job records.
+
+The single-job layer reports (E[T], E[C]); a fleet adds the queueing
+dimension: sojourn time (arrival -> finish), queueing delay (arrival ->
+admission), pool utilization, and the tail percentiles (p50/p99/p999) that
+a latency SLO is actually written against.  Replication shifts mass
+between these: extra copies cut service time but raise per-job cost and
+hence the offered load ρ = λ·E[C]·n / capacity — past ρ = 1 the queue
+diverges and every percentile explodes, which is the fleet-level story the
+single-job analysis cannot see.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .scheduler import JobRecord
+
+__all__ = ["FleetStats", "compute_stats"]
+
+
+@dataclasses.dataclass
+class FleetStats:
+    n_jobs: int
+    mean_sojourn: float  # E[arrival -> finish]
+    mean_service: float  # E[admission -> finish] (per-job E[T] under load)
+    mean_wait: float  # E[queueing delay]
+    mean_cost: float  # per-job E[C] (Definition 2)
+    utilization: float  # busy slot-time / (capacity * makespan)
+    throughput: float  # jobs finished per unit time
+    p50_sojourn: float
+    p99_sojourn: float
+    p999_sojourn: float
+    sojourn_std_err: float
+    mean_replicas: float
+    n_preempted: int
+
+    def row(self) -> str:
+        return (
+            f"E[sojourn]={self.mean_sojourn:.3f} wait={self.mean_wait:.3f} "
+            f"E[C]={self.mean_cost:.3f} util={self.utilization:.2f} "
+            f"p99={self.p99_sojourn:.3f}"
+        )
+
+
+def _batch_means_se(x: np.ndarray, n_batches: int = 20) -> float:
+    """Std error of the mean via batch means: consecutive sojourns share
+    queue backlog, so the i.i.d. std/sqrt(n) formula understates the error
+    badly near saturation.  Contiguous batches keep the within-batch
+    autocorrelation; their means are approximately independent."""
+    nb = min(n_batches, len(x))
+    if nb < 2:
+        return 0.0
+    means = np.array([b.mean() for b in np.array_split(x, nb)])
+    return float(means.std(ddof=1) / np.sqrt(nb))
+
+
+def compute_stats(
+    records: Sequence[JobRecord], capacity: int, busy_time: float
+) -> FleetStats:
+    if not records:
+        raise ValueError("no job records")
+    soj = np.array([r.sojourn for r in records])
+    wait = np.array([r.wait for r in records])
+    svc = np.array([r.service for r in records])
+    cost = np.array([r.cost for r in records])
+    t0 = min(r.arrival for r in records)
+    makespan = max(r.finish for r in records) - t0
+    return FleetStats(
+        n_jobs=len(records),
+        mean_sojourn=float(soj.mean()),
+        mean_service=float(svc.mean()),
+        mean_wait=float(wait.mean()),
+        mean_cost=float(cost.mean()),
+        utilization=float(busy_time / (capacity * max(makespan, 1e-12))),
+        throughput=float(len(records) / max(makespan, 1e-12)),
+        p50_sojourn=float(np.percentile(soj, 50)),
+        p99_sojourn=float(np.percentile(soj, 99)),
+        p999_sojourn=float(np.percentile(soj, 99.9)),
+        sojourn_std_err=_batch_means_se(soj),
+        mean_replicas=float(np.mean([r.n_replicas for r in records])),
+        n_preempted=int(sum(r.n_preempted for r in records)),
+    )

@@ -1,0 +1,384 @@
+"""Capacity-aware fleet scheduler: the discrete-event heart of repro.fleet.
+
+Semantics (DESIGN.md §9):
+
+  * the fleet has `capacity` identical worker slots; every running task
+    copy occupies one slot from launch until first-finisher cancellation;
+  * jobs queue for admission — a job starts only when `n_tasks` slots are
+    free (gang scheduling: a parallel job cannot run partially).  FIFO is
+    strict head-of-line; "priority" picks the lowest `priority` value among
+    queued jobs but still blocks behind an unfittable head only if nothing
+    fits (backfilling smaller/urgent jobs is exactly what the knob is for);
+  * replication follows the job's single-/multi-fork policy via the same
+    `num_stragglers` fork-point rule as the single-job executor: when
+    (1-p)n of a job's tasks are done, each straggler gets r fresh copies
+    (keep) or is killed and relaunched with r+1 copies.  Replicas are
+    launched *best effort* — only as many as free slots allow (a kill
+    always nets at least one fresh copy: the cancel frees a slot first);
+  * `relaunch_delay` postpones the fork by a fixed delay after the trigger
+    ("delayed relaunch", Aktaş-Peng-Soljanin 2017): copies keep running
+    during the delay and the kill, if any, happens at the delayed instant;
+  * `preempt_replicas=True` lets admission cancel *speculative* copies
+    (never the last live copy of a task) newest-first to free slots for a
+    queued job's originals — replication yields to throughput when tight;
+  * cost follows Definition 2: every copy is billed wall-clock from launch
+    to first-finisher (or cancellation), summed per job and divided by n.
+
+An optional `OnlinePolicyController` supplies the policy for jobs that
+don't pin one, learning F̂_X from completed-task telemetry across jobs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.adaptive import OnlinePolicyController
+from repro.core.policy import (
+    BASELINE,
+    MultiForkPolicy,
+    SingleForkPolicy,
+    num_stragglers,
+)
+
+from .events import Event, EventHeap
+from .workload import Job
+
+__all__ = ["FleetScheduler", "JobRecord"]
+
+
+@dataclasses.dataclass
+class JobRecord:
+    """Per-job outcome; the unit the fleet metrics aggregate over."""
+
+    job_id: int
+    arrival: float
+    start: float  # admission instant
+    finish: float  # last task completion
+    n_tasks: int
+    cost: float  # Definition 2: sum of copy runtimes / n
+    n_replicas: int  # fresh copies actually launched
+    n_preempted: int  # copies cancelled by admission preemption
+    policy: str
+
+    @property
+    def sojourn(self) -> float:
+        return self.finish - self.arrival
+
+    @property
+    def wait(self) -> float:
+        return self.start - self.arrival
+
+    @property
+    def service(self) -> float:
+        return self.finish - self.start
+
+
+@dataclasses.dataclass
+class _Copy:
+    start: float
+    event: Event  # its copy_done event (cancel via heap)
+    fresh: bool  # replica (vs original)
+    live: bool = True
+
+
+class _Task:
+    __slots__ = ("done", "copies")
+
+    def __init__(self):
+        self.done = False
+        self.copies: list[_Copy] = []
+
+    @property
+    def live_copies(self) -> list[_Copy]:
+        return [c for c in self.copies if c.live]
+
+
+class _RunningJob:
+    def __init__(self, job: Job, t_start: float, stages, durations: np.ndarray):
+        self.job = job
+        self.t_start = t_start
+        self.stages = stages  # ((p, r, keep), ...) remaining fork stages
+        self.next_stage = 0
+        self.durations = durations  # original-copy durations (telemetry)
+        self.n_done = 0
+        self.tasks = [_Task() for _ in range(job.n_tasks)]
+        self.cost = 0.0
+        self.n_replicas = 0
+        self.n_preempted = 0
+        self.fork_pending = False
+
+    def stage_threshold(self) -> Optional[int]:
+        """n_done count that triggers the next fork stage (None = no more)."""
+        if self.next_stage >= len(self.stages):
+            return None
+        p, _, _ = self.stages[self.next_stage]
+        return self.job.n_tasks - num_stragglers(self.job.n_tasks, p)
+
+
+def _normalize_stages(policy) -> tuple:
+    if policy is None:
+        return ()
+    if isinstance(policy, MultiForkPolicy):
+        return tuple(policy.stages)
+    if isinstance(policy, SingleForkPolicy):
+        if policy.is_baseline:
+            return ()
+        return ((policy.p, policy.r, policy.keep),)
+    raise TypeError(f"unsupported policy {policy!r}")
+
+
+class FleetScheduler:
+    def __init__(
+        self,
+        capacity: int,
+        default_policy: SingleForkPolicy = BASELINE,
+        discipline: str = "fifo",
+        relaunch_delay: float = 0.0,
+        preempt_replicas: bool = False,
+        fork_overhead: float = 0.0,
+        controller: Optional[OnlinePolicyController] = None,
+        seed: int = 0,
+    ):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if discipline not in ("fifo", "priority"):
+            raise ValueError(f"unknown discipline {discipline!r}")
+        self.capacity = capacity
+        self.default_policy = default_policy
+        self.discipline = discipline
+        self.relaunch_delay = relaunch_delay
+        self.preempt_replicas = preempt_replicas
+        self.fork_overhead = fork_overhead
+        self.controller = controller
+        # decorrelated from workload generators that may share `seed`
+        self.rng = np.random.default_rng((0x5C4ED, seed))
+        # run state
+        self.heap = EventHeap()
+        self.queue: list[Job] = []
+        self.running: dict[int, _RunningJob] = {}
+        self.free = capacity
+        self.records: list[JobRecord] = []
+        # instrumentation (conservation + utilization)
+        self.max_busy = 0
+        self.busy_time = 0.0  # integral of busy slots over time (copy-seconds)
+        self.now = 0.0
+
+    # ------------------------------------------------------------------ run
+    def run(self, jobs: Sequence[Job]) -> list[JobRecord]:
+        """Simulate to completion of every job; returns per-job records."""
+        ids = [j.job_id for j in jobs]
+        if len(set(ids)) != len(ids):
+            raise ValueError("job_ids must be unique (running state is keyed by id)")
+        for job in jobs:
+            self.heap.push(job.arrival, "arrive", job)
+        while self.heap:
+            ev = self.heap.pop()
+            if ev is None:
+                break
+            assert ev.time >= self.now - 1e-9, "event time went backwards"
+            self.now = ev.time
+            if ev.kind == "arrive":
+                self.queue.append(ev.data)
+                self._try_admit()
+            elif ev.kind == "copy_done":
+                self._on_copy_done(ev)
+                self._try_admit()
+            elif ev.kind == "fork":
+                self._on_fork(ev)
+                self._try_admit()  # a kill stage can net-free slots
+            else:  # pragma: no cover
+                raise RuntimeError(f"unknown event kind {ev.kind}")
+        if self.queue:  # every queued job must eventually fit
+            stuck = [j.job_id for j in self.queue]
+            raise RuntimeError(
+                f"jobs {stuck} can never be admitted "
+                f"(n_tasks > capacity={self.capacity}?)"
+            )
+        self.records.sort(key=lambda r: r.job_id)
+        return self.records
+
+    # ------------------------------------------------------------ admission
+    def _next_queued(self) -> Optional[Job]:
+        if not self.queue:
+            return None
+        if self.discipline == "fifo":
+            return self.queue[0]
+        # priority: most urgent first; FIFO among equals (arrival order is
+        # list order since arrivals push in time order)
+        return min(self.queue, key=lambda j: j.priority)
+
+    def _try_admit(self) -> None:
+        while True:
+            job = self._next_queued()
+            if job is None:
+                return
+            if job.n_tasks > self.capacity:
+                raise RuntimeError(
+                    f"job {job.job_id} needs {job.n_tasks} slots > capacity {self.capacity}"
+                )
+            if self.free < job.n_tasks and self.preempt_replicas:
+                self._preempt_for(job.n_tasks - self.free)
+            if self.free < job.n_tasks:
+                if self.discipline == "priority":
+                    # try the next-most-urgent job that fits (backfill)
+                    fit = [j for j in self.queue if j.n_tasks <= self.free]
+                    if fit:
+                        job = min(fit, key=lambda j: j.priority)
+                    else:
+                        return
+                else:
+                    return  # FIFO head-of-line blocking
+            self.queue.remove(job)
+            self._start_job(job)
+
+    def _preempt_for(self, needed: int) -> None:
+        """Cancel speculative copies (never a task's last) newest-first —
+        but only if that actually frees enough slots to admit; hedging is
+        never sacrificed for an admission that still cannot happen."""
+        victims: list[tuple[float, _RunningJob, _Copy]] = []
+        for rjob in self.running.values():
+            for task in rjob.tasks:
+                if task.done:
+                    continue
+                live = task.live_copies
+                # keep the oldest live copy; the rest are speculative
+                for c in sorted(live, key=lambda c: c.start)[1:]:
+                    victims.append((c.start, rjob, c))
+        if len(victims) < needed:
+            return
+        victims.sort(key=lambda v: v[0], reverse=True)  # newest first
+        for _, rjob, copy in victims[:needed]:
+            self._cancel_copy(rjob, copy)
+            rjob.n_preempted += 1
+
+    def _start_job(self, job: Job) -> None:
+        policy = job.policy
+        if policy is None:
+            policy = self.default_policy
+            if self.controller is not None:
+                # serve with the configured policy until the controller has
+                # actually learned a replicating one (mirrors HedgedServer)
+                learned = self.controller.current_policy()
+                if not learned.is_baseline:
+                    policy = learned
+        stages = _normalize_stages(policy)
+        n = job.n_tasks
+        durations = np.asarray(job.dist.quantile(self.rng.random(n)), dtype=np.float64)
+        rjob = _RunningJob(job, self.now, stages, durations)
+        rjob.policy_label = policy.label() if hasattr(policy, "label") else "multifork"
+        self.running[job.job_id] = rjob
+        for i in range(n):
+            self._launch_copy(rjob, i, float(durations[i]), fresh=False)
+        # degenerate n=1 fork stages can trigger at 0 completions
+        self._maybe_schedule_fork(rjob)
+
+    # -------------------------------------------------------------- copies
+    def _launch_copy(self, rjob: _RunningJob, task_id: int, duration: float, fresh: bool):
+        assert self.free > 0, "launch with no free slot"
+        self.free -= 1
+        busy = self.capacity - self.free
+        self.max_busy = max(self.max_busy, busy)
+        ev = self.heap.push(self.now + duration, "copy_done", (rjob.job.job_id, task_id))
+        copy = _Copy(start=self.now, event=ev, fresh=fresh)
+        rjob.tasks[task_id].copies.append(copy)
+        ev.data = (rjob.job.job_id, task_id, copy)
+        if fresh:
+            rjob.n_replicas += 1
+        return copy
+
+    def _cancel_copy(self, rjob: _RunningJob, copy: _Copy) -> None:
+        """Stop a running copy now: bill its runtime, free its slot."""
+        if not copy.live:
+            return
+        copy.live = False
+        self.heap.cancel(copy.event)
+        elapsed = self.now - copy.start
+        rjob.cost += elapsed
+        self.busy_time += elapsed
+        self.free += 1
+
+    def _on_copy_done(self, ev: Event) -> None:
+        job_id, task_id, copy = ev.data
+        rjob = self.running.get(job_id)
+        if rjob is None or not copy.live:
+            return
+        task = rjob.tasks[task_id]
+        assert not task.done, "finish event for a completed task survived"
+        task.done = True
+        # winner billed to now; siblings cancelled (their bill also to now)
+        copy.live = False
+        elapsed = self.now - copy.start
+        rjob.cost += elapsed
+        self.busy_time += elapsed
+        self.free += 1
+        for c in task.live_copies:
+            self._cancel_copy(rjob, c)
+        rjob.n_done += 1
+        if self.controller is not None:
+            # simulation knows the true original duration even when a
+            # replica won (same telemetry the single-job executor reports)
+            self.controller.record_task_time(float(rjob.durations[task_id]))
+        self._maybe_schedule_fork(rjob)
+        if rjob.n_done == rjob.job.n_tasks:
+            self._finish_job(rjob)
+
+    def _maybe_schedule_fork(self, rjob: _RunningJob) -> None:
+        thr = rjob.stage_threshold()
+        if thr is None or rjob.fork_pending or rjob.n_done < thr:
+            return
+        rjob.fork_pending = True
+        self.heap.push(
+            self.now + self.relaunch_delay, "fork", (rjob.job.job_id, rjob.next_stage)
+        )
+
+    def _on_fork(self, ev: Event) -> None:
+        job_id, stage_idx = ev.data
+        rjob = self.running.get(job_id)
+        if rjob is None or stage_idx != rjob.next_stage:
+            return  # job finished during the relaunch delay, or stale stage
+        _, r, keep = rjob.stages[stage_idx]
+        rjob.next_stage += 1
+        rjob.fork_pending = False
+        stragglers = [i for i, t in enumerate(rjob.tasks) if not t.done]
+        want = r if keep else r + 1
+        for i in stragglers:
+            task = rjob.tasks[i]
+            if not keep:
+                for c in task.live_copies:
+                    self._cancel_copy(rjob, c)
+            n_fresh = min(want, self.free)
+            if n_fresh:
+                fresh = np.asarray(
+                    rjob.job.dist.quantile(self.rng.random(n_fresh)), dtype=np.float64
+                )
+                for d in fresh:
+                    self._launch_copy(rjob, i, float(d) + self.fork_overhead, fresh=True)
+            if not task.live_copies:
+                # killed with zero slots anywhere (can't happen: the kill
+                # freed one) — guard so a task is never silently lost
+                raise RuntimeError(f"task {i} of job {job_id} left with no copy")
+        # a later stage may already be due (its threshold <= current n_done)
+        self._maybe_schedule_fork(rjob)
+
+    # --------------------------------------------------------------- finish
+    def _finish_job(self, rjob: _RunningJob) -> None:
+        job = rjob.job
+        del self.running[job.job_id]
+        self.records.append(
+            JobRecord(
+                job_id=job.job_id,
+                arrival=job.arrival,
+                start=rjob.t_start,
+                finish=self.now,
+                n_tasks=job.n_tasks,
+                cost=rjob.cost / job.n_tasks,
+                n_replicas=rjob.n_replicas,
+                n_preempted=rjob.n_preempted,
+                policy=getattr(rjob, "policy_label", "?"),
+            )
+        )
+        if self.controller is not None:
+            self.controller.record_job_complete()

@@ -1,0 +1,258 @@
+"""Vectorized fleet rollouts: the JAX fast path for policy sweeps.
+
+The event engine is exact but a Python loop; a sweep over (λ, p, r,
+keep|kill) grids is thousands of runs.  This module fuses the whole sweep
+into device programs for the *dedicated-capacity* regime the event engine
+reduces to when `capacity == n_tasks`: gang admission then serializes jobs
+(a job only starts when the previous one has fully drained), so the fleet
+is an M/G/1 queue whose service time is the single-job makespan T(π) and
+whose per-job cost is C(π).  Concretely:
+
+  * per-job (T, C) samples come from `repro.core.simulate.single_fork_batch`
+    — the identical Definition 1/2 semantics the event path implements,
+    with all randomness drawn in bulk (two uniform calls per sweep cell
+    instead of one key split per job);
+  * the queue is the Lindley recursion start_j = max(arrival_j, finish_{j-1})
+    as a `lax.scan`; trials vmap on top, so an m-trial × n_jobs rollout is
+    one fused program;
+  * for trace-driven workloads under π_kill, the residual draws
+    Y = min of (r+1) fresh F̂_X samples go through the Pallas
+    `kernels.residual_sampler` (eq. (7): F̄_Y = F̄_X^{r+1}), the same kernel
+    Algorithm 1 uses — one kernel call covers every job of every trial.
+
+Agreement with the event path on shared configs (same λ, π, n,
+capacity=n) is within Monte-Carlo error; tests/test_fleet.py enforces it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributions import Distribution
+from repro.core.policy import SingleForkPolicy, num_stragglers
+from repro.core.simulate import single_fork_batch
+
+__all__ = ["VectorFleetResult", "fleet_rollout", "sweep", "trace_kill_rollout"]
+
+
+@dataclasses.dataclass
+class VectorFleetResult:
+    sojourn: jnp.ndarray  # (m_trials, n_jobs)
+    wait: jnp.ndarray  # (m_trials, n_jobs)
+    service: jnp.ndarray  # (m_trials, n_jobs) per-job T
+    cost: jnp.ndarray  # (m_trials, n_jobs) per-job C
+    utilization: jnp.ndarray  # (m_trials,)
+
+    @property
+    def mean_sojourn(self) -> float:
+        return float(jnp.mean(self.sojourn))
+
+    @property
+    def mean_wait(self) -> float:
+        return float(jnp.mean(self.wait))
+
+    @property
+    def mean_service(self) -> float:
+        return float(jnp.mean(self.service))
+
+    @property
+    def mean_cost(self) -> float:
+        return float(jnp.mean(self.cost))
+
+    @property
+    def sojourn_std_err(self) -> float:
+        """Std error over per-trial means (trials are independent)."""
+        per_trial = jnp.mean(self.sojourn, axis=1)
+        m = per_trial.shape[0]
+        return float(jnp.std(per_trial) / jnp.sqrt(max(m - 1, 1)))
+
+    def percentile(self, q: float) -> float:
+        return float(jnp.percentile(self.sojourn, q))
+
+    def summary(self) -> dict:
+        vals = _summary_jit(
+            self.sojourn, self.wait, self.service, self.cost, self.utilization
+        )
+        return dict(zip(_SUMMARY_KEYS, (float(v) for v in vals)))
+
+
+_SUMMARY_KEYS = (
+    "mean_sojourn",
+    "mean_wait",
+    "mean_service",
+    "mean_cost",
+    "utilization",
+    "p50",
+    "p99",
+    "p999",
+    "sojourn_std_err",
+)
+
+
+@jax.jit
+def _summary_jit(sojourn, wait, service, cost, util):
+    """All summary scalars in one device program (one host transfer)."""
+    per_trial = jnp.mean(sojourn, axis=1)
+    m = per_trial.shape[0]
+    return jnp.stack(
+        [
+            jnp.mean(sojourn),
+            jnp.mean(wait),
+            jnp.mean(service),
+            jnp.mean(cost),
+            jnp.mean(util),
+            jnp.percentile(sojourn, 50.0),
+            jnp.percentile(sojourn, 99.0),
+            jnp.percentile(sojourn, 99.9),
+            jnp.std(per_trial) / jnp.sqrt(max(m - 1, 1)),
+        ]
+    )
+
+
+def _lindley(arrivals, services):
+    """Gang-serial queue: start_j = max(arrival_j, finish_{j-1}).
+
+    Closed form of the recursion — finish_j = P_j + max_{k<=j}(A_k - P_{k-1})
+    with P the service prefix sum — so the queue is a cumsum + cummax
+    instead of an n_jobs-step sequential scan.
+    """
+    csum = jnp.cumsum(services)
+    finishes = csum + jax.lax.cummax(arrivals - (csum - services))
+    return finishes - services, finishes
+
+
+def _queue_stats(arrivals, services, costs, n):
+    starts, finishes = _lindley(arrivals, services)
+    sojourn = finishes - arrivals
+    wait = starts - arrivals
+    # capacity = n slots; busy slot-time per job = n * C_j (Definition 2)
+    makespan = finishes[-1] - arrivals[0]
+    util = jnp.sum(costs) * n / (n * jnp.maximum(makespan, 1e-12))
+    return sojourn, wait, util
+
+
+@partial(jax.jit, static_argnames=("dist", "policy", "n", "n_jobs", "m_trials"))
+def _rollout_jit(key, dist, policy, lam, n, n_jobs, m_trials):
+    s = num_stragglers(n, policy.p)
+    ka, ks = jax.random.split(key)
+    inter = jax.random.exponential(ka, (m_trials, n_jobs)) / lam
+    arrivals = jnp.cumsum(inter, axis=1)
+    T, C = single_fork_batch(
+        ks, dist, n, s, policy.r, policy.keep, shape=(m_trials, n_jobs)
+    )
+    sojourn, wait, util = jax.vmap(partial(_queue_stats, n=n))(arrivals, T, C)
+    return sojourn, wait, T, C, util
+
+
+def fleet_rollout(
+    dist: Distribution,
+    policy: SingleForkPolicy,
+    lam: float,
+    n: int,
+    n_jobs: int,
+    m_trials: int = 32,
+    key=None,
+) -> VectorFleetResult:
+    """m_trials independent fleets of n_jobs Poisson(λ) arrivals.
+
+    `dist` must be hashable (the analytic families are frozen dataclasses);
+    trace workloads go through `trace_kill_rollout`.
+    """
+    if lam <= 0:
+        raise ValueError("arrival rate lam must be > 0")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    sojourn, wait, T, C, util = _rollout_jit(
+        key, dist, policy, float(lam), n, n_jobs, m_trials
+    )
+    return VectorFleetResult(sojourn=sojourn, wait=wait, service=T, cost=C, utilization=util)
+
+
+def sweep(
+    dist: Distribution,
+    policies,
+    lams,
+    n: int,
+    n_jobs: int,
+    m_trials: int = 32,
+    key=None,
+) -> list[dict]:
+    """Load × policy frontier: one summary row per (λ, π) cell.
+
+    λ enters the jitted rollout as a traced scalar, so the entire λ grid
+    reuses one compilation per policy.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    rows = []
+    for policy in policies:
+        for lam in lams:
+            key, sub = jax.random.split(key)
+            res = fleet_rollout(dist, policy, lam, n, n_jobs, m_trials, key=sub)
+            rows.append(dict(lam=float(lam), policy=policy.label(), **res.summary()))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# trace-driven π_kill path through the Pallas residual sampler
+# --------------------------------------------------------------------------
+
+
+def trace_kill_rollout(
+    samples,
+    policy: SingleForkPolicy,
+    lam: float,
+    n: int,
+    n_jobs: int,
+    m_trials: int = 32,
+    key=None,
+) -> VectorFleetResult:
+    """Fleet rollout where task times bootstrap an empirical trace, π_kill.
+
+    Original draws are the empirical inverse-transform gather
+    F̂_X^{-1}(u) = xs[ceil(u·n)-1]; the straggler residuals (min over r+1
+    fresh draws, eq. (7)) run through `kernels.residual_sampler` — a single
+    kernel call of shape (m_trials·n_jobs, s, r+1) covers the whole fleet.
+    """
+    from repro.kernels.residual_sampler import residual_sample
+
+    if policy.keep and not policy.is_baseline:
+        raise ValueError("the residual-sampler fast path models π_kill only")
+    if lam <= 0:
+        raise ValueError("arrival rate lam must be > 0")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    from repro.core.distributions import Empirical
+
+    emp = Empirical(samples)
+    xs = emp.sorted
+    s = num_stragglers(n, policy.p)
+    r = policy.r
+    M = m_trials * n_jobs
+    k0, k1, k2 = jax.random.split(key, 3)
+
+    # originals: (M, n) draws through the one true inverse-transform gather
+    u0 = jax.random.uniform(k0, (M, n))
+    x_sorted = jnp.sort(emp.quantile(u0), axis=1)
+    if s == 0:  # baseline: no residual phase, nothing for the kernel to do
+        T = x_sorted[:, -1].reshape(m_trials, n_jobs)
+        C = (jnp.sum(x_sorted, axis=1) / n).reshape(m_trials, n_jobs)
+    else:
+        k = n - s
+        t1 = x_sorted[:, k - 1]
+        c1 = jnp.sum(jnp.where(jnp.arange(n)[None, :] < k, x_sorted, 0.0), axis=1) + s * t1
+
+        # residuals via the Pallas kernel: per job, max_j Y_j and Σ_j Y_j
+        u = jax.random.uniform(k1, (M, s, r + 1), dtype=xs.dtype)
+        max_y, sum_y = residual_sample(u, xs)
+        T = (t1 + max_y).reshape(m_trials, n_jobs)
+        C = ((c1 + (r + 1) * sum_y) / n).reshape(m_trials, n_jobs)
+
+    inter = jax.random.exponential(k2, (m_trials, n_jobs)) / lam
+    arrivals = jnp.cumsum(inter, axis=1)
+    sojourn, wait, util = jax.vmap(partial(_queue_stats, n=n))(arrivals, T, C)
+    return VectorFleetResult(sojourn=sojourn, wait=wait, service=T, cost=C, utilization=util)

@@ -1,0 +1,145 @@
+"""Job-arrival workloads for the fleet simulator.
+
+A workload is a list of `Job`s with arrival times and a per-job execution
+time distribution; the three generators cover the regimes the queueing
+literature cares about:
+
+  * `poisson_workload`  — memoryless arrivals at rate λ (M/G/k-style load);
+  * `bursty_workload`   — on/off modulated Poisson (MMPP-flavored): bursts
+    at a high rate separated by idle gaps, same mean rate as the Poisson
+    workload but much higher arrival variance;
+  * `trace_workload`    — replay against the synthesized Google-trace jobs
+    (repro.data.traces): each arriving job draws its task-time distribution
+    `Empirical(trace)` from one of the trace jobs, so fleet sweeps run on
+    the paper's own workload shapes.
+
+Jobs with `policy=None` defer the replication decision to the scheduler
+(its default policy or the online controller); a per-job policy overrides.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.distributions import Distribution, Empirical
+from repro.core.policy import MultiForkPolicy, SingleForkPolicy
+
+__all__ = ["Job", "poisson_workload", "bursty_workload", "trace_workload"]
+
+Policy = Union[SingleForkPolicy, MultiForkPolicy]
+
+
+@dataclasses.dataclass
+class Job:
+    job_id: int
+    arrival: float
+    n_tasks: int
+    dist: Distribution
+    policy: Optional[Policy] = None  # None -> scheduler default / controller
+    priority: int = 0  # lower value = more urgent (priority discipline)
+
+    def __post_init__(self):
+        if self.n_tasks < 1:
+            raise ValueError(f"job {self.job_id}: n_tasks must be >= 1")
+        if self.arrival < 0:
+            raise ValueError(f"job {self.job_id}: negative arrival time")
+
+
+def poisson_workload(
+    n_jobs: int,
+    rate: float,
+    n_tasks: int,
+    dist: Distribution,
+    seed: int = 0,
+    policy: Optional[Policy] = None,
+    priority_levels: int = 1,
+) -> list[Job]:
+    """n_jobs Poisson(λ=rate) arrivals, all with `n_tasks` tasks ~ dist."""
+    if rate <= 0:
+        raise ValueError("rate must be > 0")
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_jobs))
+    return [
+        Job(
+            job_id=i,
+            arrival=float(arrivals[i]),
+            n_tasks=n_tasks,
+            dist=dist,
+            policy=policy,
+            priority=int(rng.integers(0, priority_levels)) if priority_levels > 1 else 0,
+        )
+        for i in range(n_jobs)
+    ]
+
+
+def bursty_workload(
+    n_jobs: int,
+    rate: float,
+    n_tasks: int,
+    dist: Distribution,
+    seed: int = 0,
+    burst_factor: float = 8.0,
+    mean_burst: int = 10,
+    policy: Optional[Policy] = None,
+) -> list[Job]:
+    """On/off arrivals with the same long-run rate as Poisson(rate).
+
+    Bursts of ~`mean_burst` jobs arrive at `burst_factor * rate`; between
+    bursts the source idles long enough that the mean rate stays `rate`.
+    """
+    if rate <= 0 or burst_factor <= 1.0:
+        raise ValueError("need rate > 0 and burst_factor > 1")
+    rng = np.random.default_rng(seed)
+    burst_rate = burst_factor * rate
+    # per-job time saved inside a burst must be repaid by idle gaps
+    gap_mean = mean_burst * (1.0 / rate - 1.0 / burst_rate)
+    t, jobs = 0.0, []
+    while len(jobs) < n_jobs:
+        # numpy's geometric is supported on {1, 2, ...} with mean mean_burst
+        burst_len = int(rng.geometric(1.0 / mean_burst))
+        for _ in range(min(burst_len, n_jobs - len(jobs))):
+            t += float(rng.exponential(1.0 / burst_rate))
+            jobs.append(
+                Job(job_id=len(jobs), arrival=t, n_tasks=n_tasks, dist=dist, policy=policy)
+            )
+        t += float(rng.exponential(gap_mean))
+    return jobs
+
+
+def trace_workload(
+    n_jobs: int,
+    rate: float,
+    n_tasks: int = 64,
+    trace_jobs: Sequence[str] = ("job1", "job2"),
+    seed: int = 0,
+    policy: Optional[Policy] = None,
+) -> list[Job]:
+    """Poisson arrivals whose task times replay the synthesized traces.
+
+    Each arriving job picks one of `trace_jobs` uniformly and draws its
+    task-time distribution as `Empirical` over that trace's samples —
+    bootstrap resampling per task, exactly the Algorithm 1 view of F̂_X.
+    Times are rescaled to mean 1 so different traces impose comparable load.
+    """
+    from repro.data.traces import load_trace
+
+    rng = np.random.default_rng(seed)
+    dists = {}
+    for name in trace_jobs:
+        x = load_trace(name, seed=seed)
+        dists[name] = Empirical(x / np.mean(x))
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_jobs))
+    names = [trace_jobs[int(rng.integers(0, len(trace_jobs)))] for _ in range(n_jobs)]
+    return [
+        Job(
+            job_id=i,
+            arrival=float(arrivals[i]),
+            n_tasks=n_tasks,
+            dist=dists[names[i]],
+            policy=policy,
+        )
+        for i in range(n_jobs)
+    ]

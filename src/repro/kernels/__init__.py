@@ -2,6 +2,10 @@
 # Mamba2 SSD) plus the paper's own bootstrap hot loop (residual sampler).
 # Each kernel ships with ops.py (jit'd wrapper) and ref.py (pure-jnp oracle).
 import jax
+from jax.experimental.pallas import tpu as _pltpu
 
 #: kernels run in interpret mode everywhere except real TPU backends
 INTERPRET = jax.default_backend() != "tpu"
+
+#: jax renamed TPUCompilerParams -> CompilerParams in newer releases
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams

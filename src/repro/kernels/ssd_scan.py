@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams as _CompilerParams
+
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, hfin_ref, h_ref, *, chunk):
     ci = pl.program_id(2)
@@ -128,7 +130,7 @@ def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 128, interpret: bool | None = No
             jax.ShapeDtypeStruct((Bt, H, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,4 +1,4 @@
 from .cluster import SimCluster, WorkerSpec  # noqa: F401
 from .executor import ExecutionReport, SpeculativeExecutor, TaskResult  # noqa: F401
-from .serving import HedgedServer  # noqa: F401
+from .serving import BatchOutcome, FleetHedgedServer, HedgedServer  # noqa: F401
 from .trainer import StragglerAwareTrainer, TrainerConfig  # noqa: F401

@@ -6,6 +6,14 @@ finished, hedges the stragglers with r duplicate requests (keep) or
 cancel-and-resend (kill).  This is 'the tail at scale' request hedging with
 the paper's machinery choosing (p, r, keep|kill) from measured latency
 traces instead of hand-tuned timeouts.
+
+Two backends:
+  * `HedgedServer`      — one batch at a time on a dedicated `SimCluster`
+    (the paper's unlimited-pool regime);
+  * `FleetHedgedServer` — many concurrent batches through `repro.fleet`:
+    batches arrive over time, queue for a finite replica pool, and every
+    hedge competes with admission of the next batch — the regime a real
+    deployment bills for.
 """
 
 from __future__ import annotations
@@ -63,3 +71,88 @@ class HedgedServer:
             policy=self._policy.label(),
         )
         return [r.value for r in report.results], stats
+
+
+@dataclasses.dataclass
+class BatchOutcome:
+    """One served batch in fleet mode: values + its queueing telemetry."""
+
+    values: list
+    arrival: float
+    start: float
+    finish: float
+    cost: float
+
+    @property
+    def sojourn(self) -> float:
+        return self.finish - self.arrival
+
+
+class FleetHedgedServer:
+    """Fleet-backed serving: each request batch is one job competing for a
+    finite pool of `capacity` model replicas.
+
+    Values are computed exactly once per request (hedged copies are
+    value-identical, as in `SpeculativeExecutor`); per-replica latency is
+    drawn from `latency_dist` inside the fleet's discrete-event engine, so
+    queueing delay between batches is part of every reported latency.
+    """
+
+    def __init__(
+        self,
+        capacity: int,
+        latency_dist,
+        serve_fn: Callable[[object], object],
+        policy: Optional[SingleForkPolicy] = None,
+        adapt: bool = True,
+        preempt_replicas: bool = True,
+        seed: int = 0,
+    ):
+        from repro.fleet import FleetConfig, FleetSim
+
+        self.capacity = capacity
+        self.latency_dist = latency_dist
+        self.serve_fn = serve_fn
+        self.sim = FleetSim(
+            FleetConfig(
+                capacity=capacity,
+                policy=policy or SingleForkPolicy(p=0.05, r=1, keep=True),
+                preempt_replicas=preempt_replicas,
+                adapt=adapt,
+                seed=seed,
+            )
+        )
+
+    def serve_stream(
+        self,
+        batches: Sequence[Sequence[object]],
+        arrivals: Optional[Sequence[float]] = None,
+        rate: float = 1.0,
+        seed: int = 0,
+    ) -> tuple[list[BatchOutcome], "object"]:
+        """Serve many batches arriving over time; returns per-batch outcomes
+        (values in request order) and the fleet-level stats."""
+        from repro.fleet import Job
+
+        if arrivals is None:
+            rng = np.random.default_rng(seed)
+            arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(batches)))
+        if len(arrivals) != len(batches):
+            raise ValueError("need one arrival time per batch")
+        jobs = [
+            Job(job_id=i, arrival=float(arrivals[i]), n_tasks=len(b), dist=self.latency_dist)
+            for i, b in enumerate(batches)
+        ]
+        report = self.sim.run(jobs)
+        outcomes = []
+        for rec, batch in zip(report.records, batches):
+            outcomes.append(
+                BatchOutcome(
+                    values=[self.serve_fn(r) for r in batch],
+                    arrival=rec.arrival,
+                    start=rec.start,
+                    finish=rec.finish,
+                    cost=rec.cost,
+                )
+            )
+        return outcomes, report.stats

@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_stubs import given, settings, st  # skips @given tests if absent
 
 from repro.core import Empirical, Pareto, ShiftedExp, Uniform, Weibull
 

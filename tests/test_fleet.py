@@ -1,0 +1,340 @@
+"""repro.fleet invariants: event ordering, capacity conservation, scheduler
+semantics (FIFO/priority/preemption/delayed relaunch), agreement of the
+vectorized fast path with the event engine, and the low-load reduction to
+single-job SpeculativeExecutor/simulate results."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BASELINE,
+    MultiForkPolicy,
+    ShiftedExp,
+    SingleForkPolicy,
+    simulate,
+)
+from repro.fleet import (
+    EventHeap,
+    FleetConfig,
+    FleetSim,
+    Job,
+    bursty_workload,
+    poisson_workload,
+    trace_workload,
+    vector,
+)
+from repro.runtime import FleetHedgedServer, SimCluster, SpeculativeExecutor
+
+DIST = ShiftedExp(1.0, 1.0)
+
+
+# ---------------------------------------------------------------- events
+
+
+def test_event_heap_orders_by_time_then_fifo():
+    heap = EventHeap()
+    rng = np.random.default_rng(0)
+    times = rng.uniform(0, 100, size=200).round(1)  # rounding forces ties
+    for t in times:
+        heap.push(float(t), "e")
+    popped = []
+    while heap:
+        popped.append(heap.pop())
+    assert [e.time for e in popped] == sorted(times.tolist())
+    for a, b in zip(popped, popped[1:]):
+        if a.time == b.time:  # FIFO tie-break: insertion order
+            assert a.seq < b.seq
+
+
+def test_event_heap_lazy_cancellation():
+    heap = EventHeap()
+    keep = heap.push(1.0, "keep")
+    dead = heap.push(0.5, "dead")
+    heap.cancel(dead)
+    assert len(heap) == 1
+    assert heap.peek_time() == 1.0
+    assert heap.pop() is keep
+    assert heap.pop() is None
+
+
+def test_event_heap_rejects_bad_times():
+    heap = EventHeap()
+    with pytest.raises(ValueError):
+        heap.push(-1.0, "e")
+    with pytest.raises(ValueError):
+        heap.push(float("nan"), "e")
+
+
+# ------------------------------------------------------------- workloads
+
+
+def test_poisson_workload_rate():
+    jobs = poisson_workload(4000, rate=2.0, n_tasks=4, dist=DIST, seed=0)
+    inter = np.diff([0.0] + [j.arrival for j in jobs])
+    assert abs(inter.mean() - 0.5) < 0.03
+    assert all(a.arrival < b.arrival for a, b in zip(jobs, jobs[1:]))
+
+
+def test_bursty_workload_same_mean_rate_higher_variance():
+    # 20k arrivals: the gap draws dominate the variance of the realized
+    # rate, so smaller samples wobble past any honest tolerance
+    pois = poisson_workload(20000, rate=1.0, n_tasks=4, dist=DIST, seed=1)
+    burst = bursty_workload(20000, rate=1.0, n_tasks=4, dist=DIST, seed=1)
+    ip = np.diff([j.arrival for j in pois])
+    ib = np.diff([j.arrival for j in burst])
+    assert abs(ib.mean() / ip.mean() - 1.0) < 0.06  # same long-run rate
+    assert ib.var() > 2.0 * ip.var()  # much burstier
+
+
+def test_trace_workload_draws_empirical_dists():
+    jobs = trace_workload(20, rate=1.0, n_tasks=8, seed=0)
+    assert len(jobs) == 20
+    for j in jobs:
+        assert abs(float(j.dist.mean()) - 1.0) < 1e-5  # normalized traces
+        assert j.n_tasks == 8
+
+
+# ----------------------------------------------------- scheduler semantics
+
+
+def _run(jobs, **cfg):
+    config = FleetConfig(**{"capacity": 32, "seed": 7, **cfg})
+    sim = FleetSim(config)
+    return sim.run(jobs)
+
+
+def test_capacity_conservation_and_completion():
+    """No instant uses more slots than exist, even under aggressive
+    replication + preemption, and every job finishes exactly once."""
+    pol = SingleForkPolicy(p=0.5, r=3, keep=False)
+    jobs = poisson_workload(60, rate=1.5, n_tasks=12, dist=DIST, seed=3, policy=pol)
+    for preempt in (False, True):
+        rep = _run(jobs, capacity=20, preempt_replicas=preempt)
+        assert rep.max_busy <= 20
+        assert len(rep.records) == 60
+        assert sorted(r.job_id for r in rep.records) == list(range(60))
+        for r in rep.records:
+            assert r.finish >= r.start >= r.arrival
+            assert r.cost > 0
+
+
+def test_fifo_gang_serialization():
+    """capacity == n_tasks forces strict job-serial execution."""
+    jobs = [
+        Job(job_id=0, arrival=0.0, n_tasks=8, dist=DIST),
+        Job(job_id=1, arrival=0.1, n_tasks=8, dist=DIST),
+    ]
+    rep = _run(jobs, capacity=8)
+    r0, r1 = rep.records
+    assert r0.wait == 0.0
+    assert r1.start == pytest.approx(r0.finish)
+
+
+def test_priority_discipline_reorders_queue():
+    """Two queued jobs: the urgent one (lower priority value) starts first
+    under 'priority', the earlier one under 'fifo'."""
+    jobs = [
+        Job(job_id=0, arrival=0.0, n_tasks=8, dist=DIST, priority=5),
+        Job(job_id=1, arrival=0.1, n_tasks=8, dist=DIST, priority=5),
+        Job(job_id=2, arrival=0.2, n_tasks=8, dist=DIST, priority=0),
+    ]
+    fifo = _run(jobs, capacity=8, discipline="fifo")
+    prio = _run(jobs, capacity=8, discipline="priority")
+    assert fifo.records[1].start < fifo.records[2].start
+    assert prio.records[2].start < prio.records[1].start
+
+
+def test_delayed_relaunch_degrades_to_baseline():
+    """A relaunch delay longer than any job run means the fork never fires:
+    pathwise identical to the baseline (same seed, same draws).  A moderate
+    delay sits between instant relaunch and baseline in expectation."""
+    pol = SingleForkPolicy(p=0.3, r=2, keep=True)
+    dist = ShiftedExp(1.0, 0.4)
+
+    def mean_latency(policy, delay, seeds=30):
+        lats = []
+        for seed in range(seeds):
+            jobs = [Job(job_id=0, arrival=0.0, n_tasks=16, dist=dist, policy=policy)]
+            rep = _run(jobs, capacity=64, relaunch_delay=delay, seed=seed)
+            lats.append(rep.records[0].finish)
+        return np.asarray(lats)
+
+    never = mean_latency(pol, delay=1e9)
+    base = mean_latency(BASELINE, delay=0.0)
+    np.testing.assert_allclose(never, base)  # exact pathwise reduction
+    instant = mean_latency(pol, delay=0.0)
+    assert instant.mean() < base.mean()  # replication helps on this dist
+    delayed = mean_latency(pol, delay=1.0)
+    assert instant.mean() <= delayed.mean() + 0.1
+
+
+def test_preemption_speeds_up_admission():
+    """A replica-hungry job ahead of the queue: preemption cancels its
+    speculative copies so the next job starts no later."""
+    hog = SingleForkPolicy(p=0.6, r=3, keep=True)
+    jobs = [
+        Job(job_id=0, arrival=0.0, n_tasks=12, dist=ShiftedExp(1.0, 0.3), policy=hog),
+        Job(job_id=1, arrival=0.5, n_tasks=12, dist=DIST, policy=BASELINE),
+    ]
+    off = _run(jobs, capacity=16, preempt_replicas=False)
+    on = _run(jobs, capacity=16, preempt_replicas=True)
+    assert on.records[1].start <= off.records[1].start
+    assert on.stats.n_preempted > 0
+
+
+def test_multifork_policy_runs():
+    pol = MultiForkPolicy(((0.4, 1, True), (0.1, 2, False)))
+    jobs = [Job(job_id=0, arrival=0.0, n_tasks=16, dist=DIST, policy=pol)]
+    rep = _run(jobs, capacity=64)
+    assert rep.records[0].n_replicas > 0
+    assert rep.records[0].finish > 0
+
+
+def test_adaptive_controller_engages():
+    jobs = poisson_workload(40, rate=0.5, n_tasks=16, dist=DIST, seed=2)
+    sim = FleetSim(FleetConfig(capacity=16, adapt=True, seed=2))
+    rep = sim.run(jobs)
+    assert rep.controller is not None
+    assert rep.controller.n_samples >= 40 * 16 * 0.9  # telemetry flowed
+    assert rep.final_policy is not None
+
+
+def test_adaptive_serves_configured_policy_until_learned():
+    """Before the controller has learned a replicating policy, jobs run the
+    configured default — not the controller's initial BASELINE."""
+    pol = SingleForkPolicy(0.2, 1, True)
+    jobs = [Job(job_id=0, arrival=0.0, n_tasks=16, dist=DIST)]
+    rep = FleetSim(FleetConfig(capacity=64, policy=pol, adapt=True, seed=0)).run(jobs)
+    assert rep.records[0].policy == pol.label()
+
+
+def test_unadmittable_job_raises():
+    jobs = [Job(job_id=0, arrival=0.0, n_tasks=64, dist=DIST)]
+    with pytest.raises(RuntimeError, match="capacity"):
+        _run(jobs, capacity=16)
+
+
+def test_duplicate_job_ids_rejected():
+    jobs = [
+        Job(job_id=0, arrival=0.0, n_tasks=4, dist=DIST),
+        Job(job_id=0, arrival=0.1, n_tasks=4, dist=DIST),
+    ]
+    with pytest.raises(ValueError, match="unique"):
+        _run(jobs, capacity=16)
+
+
+# ------------------------------------------- vector path vs event engine
+
+
+@pytest.mark.parametrize(
+    "policy",
+    [
+        SingleForkPolicy(0.0, 0, True),
+        SingleForkPolicy(0.2, 1, True),
+        SingleForkPolicy(0.25, 1, False),
+    ],
+    ids=["baseline", "keep", "kill"],
+)
+def test_vector_agrees_with_event_engine(policy):
+    """capacity == n makes the event engine exactly the gang-serial queue
+    the vectorized path models; means must agree within combined MC error."""
+    n, n_jobs, lam = 10, 150, 0.15
+    soj, cost = [], []
+    for seed in range(6):
+        jobs = poisson_workload(n_jobs, rate=lam, n_tasks=n, dist=DIST, seed=seed)
+        rep = FleetSim(FleetConfig(capacity=n, policy=policy, seed=seed)).run(jobs)
+        soj.append(rep.stats.mean_sojourn)
+        cost.append(rep.stats.mean_cost)
+    res = vector.fleet_rollout(DIST, policy, lam, n, n_jobs, m_trials=32)
+    se = float(np.hypot(np.std(soj) / np.sqrt(len(soj)), res.sojourn_std_err))
+    assert abs(np.mean(soj) - res.mean_sojourn) < 5 * se + 0.05
+    assert abs(np.mean(cost) - res.mean_cost) < 0.1
+
+
+def test_vector_trace_kernel_path_agrees_with_simulate():
+    """The Pallas residual-sampler service times must match the reference
+    vectorized simulator on an Empirical distribution (pi_kill)."""
+    from repro.core import Empirical
+    from repro.data.traces import load_trace
+
+    x = load_trace("job2", seed=0)
+    x = x / x.mean()
+    pol = SingleForkPolicy(p=0.2, r=1, keep=False)
+    res = vector.trace_kill_rollout(x, pol, lam=0.01, n=16, n_jobs=64, m_trials=16)
+    sim = simulate(Empirical(x), pol, n=16, m=4000)
+    assert res.mean_service == pytest.approx(sim.mean_latency, rel=0.05)
+    assert res.mean_cost == pytest.approx(sim.mean_cost, rel=0.05)
+
+
+def test_vector_trace_path_rejects_keep():
+    with pytest.raises(ValueError):
+        vector.trace_kill_rollout(
+            np.ones(10), SingleForkPolicy(0.2, 1, True), 0.1, 8, 10, 2
+        )
+
+
+def test_vector_trace_path_baseline():
+    """p=0 has no residual phase: the trace path must return plain
+    baseline order statistics instead of a zero-size kernel call."""
+    rng = np.random.default_rng(0)
+    x = rng.exponential(1.0, size=200) + 1.0
+    res = vector.trace_kill_rollout(x, BASELINE, lam=0.01, n=8, n_jobs=64, m_trials=8)
+    from repro.core import Empirical
+
+    ref = simulate(Empirical(x), BASELINE, n=8, m=4000)
+    assert res.mean_service == pytest.approx(ref.mean_latency, rel=0.05)
+    assert res.mean_cost == pytest.approx(ref.mean_cost, rel=0.05)
+
+
+# -------------------------------------------------- low-load reductions
+
+
+def test_low_load_fleet_reduces_to_single_job_simulate():
+    """lambda -> 0: no queueing, so per-job sojourn == service and the
+    service/cost means match the single-job Monte-Carlo simulator."""
+    pol = SingleForkPolicy(p=0.2, r=1, keep=True)
+    n = 10
+    jobs = poisson_workload(150, rate=1e-3, n_tasks=n, dist=DIST, seed=4, policy=pol)
+    rep = FleetSim(FleetConfig(capacity=4 * n, seed=4)).run(jobs)
+    assert rep.stats.mean_wait == 0.0
+    ref = simulate(DIST, pol, n=n, m=4000)
+    tol = 5 * (rep.stats.sojourn_std_err + ref.latency_std_err)
+    assert abs(rep.stats.mean_sojourn - ref.mean_latency) < tol
+    assert abs(rep.stats.mean_cost - ref.mean_cost) < 0.12
+
+
+def test_low_load_fleet_matches_speculative_executor():
+    """One fleet job == one SpeculativeExecutor run, statistically: same
+    policy, same distribution, mean latency/cost within MC error."""
+    pol = SingleForkPolicy(p=0.2, r=1, keep=True)
+    n, trials = 10, 120
+    ex_lat, ex_cost = [], []
+    for seed in range(trials):
+        cluster = SimCluster(4 * n, DIST, seed=seed)
+        repx = SpeculativeExecutor(cluster).run([lambda: 0] * n, pol)
+        ex_lat.append(repx.latency)
+        ex_cost.append(repx.cost)
+    jobs = poisson_workload(trials, rate=1e-3, n_tasks=n, dist=DIST, seed=9, policy=pol)
+    rep = FleetSim(FleetConfig(capacity=4 * n, seed=9)).run(jobs)
+    se = np.std(ex_lat) / np.sqrt(trials) + rep.stats.sojourn_std_err
+    assert abs(np.mean(ex_lat) - rep.stats.mean_sojourn) < 5 * se + 0.05
+    assert abs(np.mean(ex_cost) - rep.stats.mean_cost) < 0.15
+
+
+# ------------------------------------------------------------- serving
+
+
+def test_fleet_hedged_server_values_and_stats():
+    srv = FleetHedgedServer(
+        capacity=32,
+        latency_dist=ShiftedExp(0.01, 20.0),
+        serve_fn=lambda r: r * 2,
+        adapt=False,
+        seed=1,
+    )
+    batches = [list(range(i, i + 8)) for i in range(6)]
+    outcomes, stats = srv.serve_stream(batches, rate=5.0, seed=2)
+    assert [o.values for o in outcomes] == [[2 * r for r in b] for b in batches]
+    assert stats.n_jobs == 6
+    for o in outcomes:
+        assert o.finish >= o.start >= o.arrival
