@@ -1,14 +1,21 @@
 """Fleet economics: load × policy frontier under finite capacity.
 
-Three measurements:
+Five measurements:
   * event-driven sweep (exact engine) and vectorized sweep (JAX fast path)
     over the SAME (λ, policy) grid with capacity = n (the regime where the
     two models coincide) — reports wall-clock for both and the speedup;
-  * agreement of the two paths' mean sojourn/cost on one shared cell,
-    in units of the combined Monte-Carlo standard error;
-  * a shared-capacity event sweep (capacity = 3n) showing the fleet-only
-    effect: aggressive replication raises per-job cost, hence offered load,
-    and collapses under queueing while small-p forking does not.
+  * the same race at c = 3 gang blocks (capacity = 3n, aligned placement
+    vs the Kiefer–Wolfowitz vector path) — the multi-server regime PR 2
+    opened; gated on ≥10× speedup AND ≤5σ agreement on a shared cell;
+  * agreement of the two paths' mean sojourn/cost on one shared c = 1
+    cell, in units of the combined Monte-Carlo standard error;
+  * a capacity/heterogeneity frontier: constant 6 gang blocks, sweeping
+    the fast/slow class mix (slow pool at half speed) with the vector
+    path, one event-engine cross-check cell;
+  * a shared-capacity event sweep (capacity = 3n, pooled placement)
+    showing the fleet-only effect: aggressive replication raises per-job
+    cost, hence offered load, and collapses under queueing while small-p
+    forking does not.
 
 Artifact: benchmarks/results/fleet_frontier.json.
 """
@@ -20,7 +27,7 @@ import time
 import numpy as np
 
 from repro.core import ShiftedExp, SingleForkPolicy
-from repro.fleet import FleetConfig, FleetSim, poisson_workload, vector
+from repro.fleet import FleetConfig, FleetSim, MachineClass, poisson_workload, vector
 
 from .common import save_json
 
@@ -48,14 +55,48 @@ SHARED_POLICIES = (
 )
 
 
-def _event_sweep(capacity: int, policies=POLICIES, lams=LAMS, seed0: int = 0) -> list[dict]:
+# c>1 sweep: 3 gang blocks triple the service capacity, so the λ grid
+# scales by 3 to probe the same ρ range
+C_BLOCKS = 3
+C_LAMS = tuple(3 * l for l in LAMS)
+# heterogeneity frontier: 6 gang blocks total, slow pool at half speed
+HET_MIXES = ((6, 0), (4, 2), (2, 4), (0, 6))
+HET_SLOW_SPEED = 0.5
+HET_LAM = 0.45
+
+
+def _mix_classes(n_fast: int, n_slow: int) -> tuple:
+    cls = []
+    if n_fast:
+        cls.append(MachineClass("fast", n_fast * N_TASKS, 1.0))
+    if n_slow:
+        cls.append(MachineClass("slow", n_slow * N_TASKS, HET_SLOW_SPEED))
+    return tuple(cls)
+
+
+def _event_sweep(
+    capacity=None,
+    policies=POLICIES,
+    lams=LAMS,
+    seed0: int = 0,
+    classes=None,
+    placement: str = "pooled",
+) -> list[dict]:
     rows = []
     for policy in policies:
         for lam in lams:
             jobs = poisson_workload(
                 N_JOBS, rate=lam, n_tasks=N_TASKS, dist=DIST, seed=seed0 + int(lam * 1e3)
             )
-            rep = FleetSim(FleetConfig(capacity=capacity, policy=policy, seed=seed0)).run(jobs)
+            rep = FleetSim(
+                FleetConfig(
+                    capacity=capacity,
+                    policy=policy,
+                    seed=seed0,
+                    classes=classes,
+                    placement=placement,
+                )
+            ).run(jobs)
             s = rep.stats
             rows.append(
                 dict(
@@ -72,6 +113,30 @@ def _event_sweep(capacity: int, policies=POLICIES, lams=LAMS, seed0: int = 0) ->
                 )
             )
     return rows
+
+
+def _shared_cell_agreement(lam, policy, n_seeds, config_kwargs, rollout_kwargs):
+    """Event-vs-vector deviation on one shared (λ, π) cell.
+
+    Returns (vector_result, event_mean_sojourn, event_mean_cost,
+    sojourn_deviation_in_combined_MC_sigma, cost_deviation) — the one gate
+    formula every agreement cell (c=1, c>1, heterogeneous) shares.
+    """
+    ev_soj, ev_cost = [], []
+    for seed in range(n_seeds):
+        jobs = poisson_workload(N_JOBS, rate=lam, n_tasks=N_TASKS, dist=DIST, seed=seed)
+        rep = FleetSim(
+            FleetConfig(policy=policy, seed=seed, **config_kwargs)
+        ).run(jobs)
+        ev_soj.append(rep.stats.mean_sojourn)
+        ev_cost.append(rep.stats.mean_cost)
+    res = vector.fleet_rollout(
+        DIST, policy, lam, N_TASKS, N_JOBS, m_trials=48, **rollout_kwargs
+    )
+    sigma = float(np.hypot(np.std(ev_soj) / np.sqrt(n_seeds), res.sojourn_std_err))
+    dev = abs(float(np.mean(ev_soj)) - res.mean_sojourn) / max(sigma, 1e-12)
+    cost_dev = abs(float(np.mean(ev_cost)) - res.mean_cost)
+    return res, float(np.mean(ev_soj)), float(np.mean(ev_cost)), dev, cost_dev
 
 
 def run():
@@ -112,19 +177,94 @@ def run():
         ("fleet_sweep_vector", vec_s * 1e6 / len(vec_rows), f"speedup={speedup:.1f}x")
     )
 
+    # -- c > 1: Kiefer–Wolfowitz race against the aligned event engine -----
+    vector.sweep(
+        DIST, POLICIES, C_LAMS[:1], N_TASKS, N_JOBS, m_trials=M_TRIALS, c=C_BLOCKS
+    )  # warm the KW-scan compilation before timing
+    kw_speedup = 0.0
+    for attempt in range(3):
+        t0 = time.perf_counter()
+        kw_event_rows = _event_sweep(
+            capacity=C_BLOCKS * N_TASKS, lams=C_LAMS, placement="aligned"
+        )
+        attempt_event_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        kw_vec_rows = vector.sweep(
+            DIST, POLICIES, C_LAMS, N_TASKS, N_JOBS, m_trials=M_TRIALS, c=C_BLOCKS
+        )
+        attempt_vec_s = time.perf_counter() - t0
+        if attempt_event_s / max(attempt_vec_s, 1e-9) > kw_speedup:
+            kw_speedup = attempt_event_s / max(attempt_vec_s, 1e-9)
+            kw_event_s, kw_vec_s = attempt_event_s, attempt_vec_s
+        if kw_speedup >= 10.0:
+            break
+    if kw_speedup < 10.0:
+        failures.append(
+            f"c={C_BLOCKS} KW sweep only {kw_speedup:.1f}x faster than the aligned "
+            f"event engine (acceptance floor: 10x; event={kw_event_s:.2f}s "
+            f"vec={kw_vec_s:.2f}s)"
+        )
+    rows.append(
+        ("fleet_sweep_event_c3", kw_event_s * 1e6 / len(kw_event_rows),
+         f"cells={len(kw_event_rows)};aligned")
+    )
+    rows.append(
+        ("fleet_sweep_vector_c3", kw_vec_s * 1e6 / len(kw_vec_rows),
+         f"speedup={kw_speedup:.1f}x")
+    )
+
+    # agreement on a shared c=3 cell (5σ gate, same as the c=1 cell below)
+    lam3, policy3 = C_LAMS[1], POLICIES[1]
+    res3, ev3_soj_mean, ev3_cost_mean, dev3, cost_dev3 = _shared_cell_agreement(
+        lam3, policy3, n_seeds=6,
+        config_kwargs=dict(capacity=C_BLOCKS * N_TASKS, placement="aligned"),
+        rollout_kwargs=dict(c=C_BLOCKS),
+    )
+    if dev3 > 5.0 or cost_dev3 > 0.1:
+        failures.append(
+            f"c={C_BLOCKS} KW/event paths disagree: sojourn off by "
+            f"{dev3:.1f} sigma, cost by {cost_dev3:.4f}"
+        )
+    rows.append(
+        ("fleet_agreement_c3", 0.0, f"sojourn_dev={dev3:.2f}sigma;cost_dev={cost_dev3:.4f}")
+    )
+
+    # -- heterogeneity frontier: fast/slow mix at constant block count -----
+    het_rows = []
+    for n_fast, n_slow in HET_MIXES:
+        mix = _mix_classes(n_fast, n_slow)
+        row = vector.sweep(
+            DIST, (POLICIES[1],), (HET_LAM,), N_TASKS, N_JOBS,
+            m_trials=M_TRIALS, classes=mix,
+        )[0]
+        row["mix"] = f"{n_fast}fast+{n_slow}slow"
+        het_rows.append(row)
+    # slow capacity is cheaper but hotter: waiting grows with the slow share
+    het_p99 = {r["mix"]: r["p99"] for r in het_rows}
+    rows.append(
+        ("fleet_hetero_frontier", 0.0,
+         ";".join(f"{m}:p99={p:.1f}s" for m, p in het_p99.items()))
+    )
+    # cross-check one mixed cell against the aligned event engine
+    mix = _mix_classes(4, 2)
+    resh, evh_soj_mean, _, devh, _ = _shared_cell_agreement(
+        HET_LAM, POLICIES[1], n_seeds=4,
+        config_kwargs=dict(classes=mix, placement="aligned"),
+        rollout_kwargs=dict(classes=mix),
+    )
+    if devh > 5.0:
+        failures.append(
+            f"heterogeneous KW/event paths disagree: sojourn off by {devh:.1f} sigma"
+        )
+    rows.append(("fleet_hetero_agreement", 0.0, f"sojourn_dev={devh:.2f}sigma"))
+
     # -- agreement on a shared small config --------------------------------
     lam, policy = 0.12, POLICIES[1]
-    ev_soj, ev_cost = [], []
-    for seed in range(8):
-        jobs = poisson_workload(N_JOBS, rate=lam, n_tasks=N_TASKS, dist=DIST, seed=seed)
-        rep = FleetSim(FleetConfig(capacity=N_TASKS, policy=policy, seed=seed)).run(jobs)
-        ev_soj.append(rep.stats.mean_sojourn)
-        ev_cost.append(rep.stats.mean_cost)
-    res = vector.fleet_rollout(DIST, policy, lam, N_TASKS, N_JOBS, m_trials=48)
-    se_event = float(np.std(ev_soj) / np.sqrt(len(ev_soj)))
-    sigma = float(np.hypot(se_event, res.sojourn_std_err))
-    dev = abs(float(np.mean(ev_soj)) - res.mean_sojourn) / max(sigma, 1e-12)
-    cost_dev = abs(float(np.mean(ev_cost)) - res.mean_cost)
+    res, ev_soj_mean, ev_cost_mean, dev, cost_dev = _shared_cell_agreement(
+        lam, policy, n_seeds=8,
+        config_kwargs=dict(capacity=N_TASKS),
+        rollout_kwargs={},
+    )
     if dev > 5.0 or cost_dev > 0.1:
         failures.append(
             f"event/vector paths disagree on the shared config: "
@@ -160,11 +300,38 @@ def run():
             agreement=dict(
                 lam=lam,
                 policy=policy.label(),
-                event_mean_sojourn=float(np.mean(ev_soj)),
+                event_mean_sojourn=ev_soj_mean,
                 vector_mean_sojourn=res.mean_sojourn,
                 deviation_sigma=dev,
-                event_mean_cost=float(np.mean(ev_cost)),
+                event_mean_cost=ev_cost_mean,
                 vector_mean_cost=res.mean_cost,
+            ),
+            kw=dict(
+                c=C_BLOCKS,
+                lams=list(C_LAMS),
+                event=kw_event_rows,
+                vector=kw_vec_rows,
+                timing=dict(event_s=kw_event_s, vector_s=kw_vec_s, speedup=kw_speedup),
+                agreement=dict(
+                    lam=lam3,
+                    policy=policy3.label(),
+                    event_mean_sojourn=ev3_soj_mean,
+                    vector_mean_sojourn=res3.mean_sojourn,
+                    deviation_sigma=dev3,
+                    cost_deviation=cost_dev3,
+                ),
+            ),
+            heterogeneity=dict(
+                lam=HET_LAM,
+                slow_speed=HET_SLOW_SPEED,
+                policy=POLICIES[1].label(),
+                frontier=het_rows,
+                agreement=dict(
+                    mix="4fast+2slow",
+                    event_mean_sojourn=evh_soj_mean,
+                    vector_mean_sojourn=resh.mean_sojourn,
+                    deviation_sigma=devh,
+                ),
             ),
         ),
     )

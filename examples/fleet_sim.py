@@ -17,7 +17,7 @@ small-p policy in a fraction of the event engine's time.
 import time
 
 from repro.core import ShiftedExp, SingleForkPolicy
-from repro.fleet import FleetConfig, FleetSim, poisson_workload, vector
+from repro.fleet import FleetConfig, FleetSim, MachineClass, poisson_workload, vector
 
 DIST = ShiftedExp(1.0, 1.0)  # task times: 1s floor + Exp(1) tail
 N_TASKS = 20  # tasks per job (gang-scheduled)
@@ -72,3 +72,52 @@ for r in rows:
         f"  lambda={r['lam']:.2f}  E[sojourn]={r['mean_sojourn']:6.2f}  "
         f"p99={r['p99']:6.1f}  util={r['utilization']:.2f}"
     )
+
+# -- multi-server fast path: how many gang blocks does the SLO need? --------
+# Kiefer-Wolfowitz G/G/c sweep: same policy and load, growing c.  The whole
+# capacity-planning curve is a handful of fused device programs.
+print("\ncapacity planning via the KW fast path (lambda=0.6, pi_keep(0.05,1)):")
+for c in (1, 2, 3, 4):
+    res = vector.fleet_rollout(
+        DIST, POLICIES[1][1], lam=0.6, n=N_TASKS, n_jobs=N_JOBS, m_trials=16, c=c
+    )
+    print(
+        f"  c={c} blocks ({c * N_TASKS:3d} slots): E[wait]={res.mean_wait:7.2f}  "
+        f"p99={res.percentile(99):7.1f}  util={float(res.utilization.mean()):.2f}"
+    )
+
+# -- heterogeneous pools: is cheap slow capacity worth it? ------------------
+# Constant 4 gang blocks, but part of the fleet is a half-speed (spot /
+# previous-gen) pool: jobs overflow onto it only when the fast pool is
+# busy, and every job it serves runs 2x longer.
+print("\nfast/slow mix at 4 blocks (slow pool at half speed), lambda=0.6:")
+for n_fast, n_slow in ((4, 0), (3, 1), (2, 2), (1, 3)):
+    cls = []
+    if n_fast:
+        cls.append(MachineClass("fast", n_fast * N_TASKS, 1.0))
+    if n_slow:
+        cls.append(MachineClass("slow", n_slow * N_TASKS, 0.5))
+    res = vector.fleet_rollout(
+        DIST, POLICIES[1][1], lam=0.6, n=N_TASKS, n_jobs=N_JOBS,
+        m_trials=16, classes=tuple(cls),
+    )
+    s = res.summary()
+    util_slow = s.get("util_slow", 0.0)
+    print(
+        f"  {n_fast}fast+{n_slow}slow: E[sojourn]={s['mean_sojourn']:6.2f}  "
+        f"p99={s['p99']:6.1f}  slow-pool util={util_slow:.2f}"
+    )
+
+# the same mixes through the exact event engine (aligned placement) land on
+# the same frontier -- that is what tests/test_fleet.py enforces; here we
+# just show one cross-checked cell
+jobs = poisson_workload(N_JOBS, rate=0.6, n_tasks=N_TASKS, dist=DIST, seed=3)
+classes = (MachineClass("fast", 2 * N_TASKS, 1.0), MachineClass("slow", 2 * N_TASKS, 0.5))
+rep = FleetSim(
+    FleetConfig(policy=POLICIES[1][1], seed=3, classes=classes, placement="aligned")
+).run(jobs)
+print(
+    f"\nevent-engine cross-check (2fast+2slow): E[sojourn]={rep.stats.mean_sojourn:.2f}, "
+    f"per-class util={ {k: round(v, 2) for k, v in rep.stats.class_utilization.items()} }, "
+    f"job share={ {k: round(v, 2) for k, v in rep.stats.class_job_share.items()} }"
+)

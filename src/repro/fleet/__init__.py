@@ -7,10 +7,12 @@
 #   * `FleetSim` — exact event-heap discrete-event engine (events.py,
 #     scheduler.py), any admission discipline / preemption / relaunch delay;
 #   * `repro.fleet.vector` — vmapped many-trial JAX rollouts for the
-#     dedicated-capacity (serial-admission) regime, for policy sweeps.
+#     gang-aligned G/G/c regime (Kiefer–Wolfowitz recursion, heterogeneous
+#     machine classes as per-slot speeds), for policy sweeps.
 from .events import Event, EventHeap  # noqa: F401
 from .workload import (  # noqa: F401
     Job,
+    MachineClass,
     bursty_workload,
     poisson_workload,
     trace_workload,

@@ -23,14 +23,14 @@ from repro.core.policy import BASELINE, SingleForkPolicy
 
 from .metrics import FleetStats, compute_stats
 from .scheduler import FleetScheduler, JobRecord
-from .workload import Job
+from .workload import Job, MachineClass
 
 __all__ = ["FleetConfig", "FleetReport", "FleetSim", "run_fleet"]
 
 
 @dataclasses.dataclass
 class FleetConfig:
-    capacity: int
+    capacity: Optional[int] = None  # or derive from `classes`
     policy: SingleForkPolicy = BASELINE  # default for jobs with policy=None
     discipline: str = "fifo"  # or "priority"
     relaunch_delay: float = 0.0  # delayed-relaunch knob
@@ -39,6 +39,11 @@ class FleetConfig:
     adapt: bool = False  # learn the policy online
     objective: str = "latency"  # controller objective when adapt=True
     seed: int = 0
+    # heterogeneous pools: class specs + copy placement ("pooled" packs
+    # fastest-free-first and may split a job across classes; "aligned"
+    # reserves a one-class gang block per job — the KW fast-path oracle)
+    classes: Optional[Sequence[MachineClass]] = None
+    placement: str = "pooled"
 
 
 @dataclasses.dataclass
@@ -75,13 +80,21 @@ class FleetSim:
             fork_overhead=cfg.fork_overhead,
             controller=self.controller,
             seed=cfg.seed,
+            classes=cfg.classes,
+            placement=cfg.placement,
         )
         records = sched.run(jobs)
-        stats = compute_stats(records, cfg.capacity, sched.busy_time)
+        stats = compute_stats(
+            records,
+            sched.capacity,
+            sched.busy_time,
+            classes=sched.classes if cfg.classes is not None else None,
+            busy_by_class=sched.busy_by_class if cfg.classes is not None else None,
+        )
         return FleetReport(
             records=records,
             stats=stats,
-            capacity=cfg.capacity,
+            capacity=sched.capacity,
             max_busy=sched.max_busy,
             busy_time=sched.busy_time,
             controller=self.controller,

@@ -13,11 +13,12 @@ single-job analysis cannot see.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
 from .scheduler import JobRecord
+from .workload import MachineClass
 
 __all__ = ["FleetStats", "compute_stats"]
 
@@ -37,6 +38,10 @@ class FleetStats:
     sojourn_std_err: float
     mean_replicas: float
     n_preempted: int
+    # heterogeneous fleets: per-class busy fraction and job share, keyed by
+    # class name (None on single-class fleets built without class specs)
+    class_utilization: Optional[dict] = None
+    class_job_share: Optional[dict] = None
 
     def row(self) -> str:
         return (
@@ -59,7 +64,11 @@ def _batch_means_se(x: np.ndarray, n_batches: int = 20) -> float:
 
 
 def compute_stats(
-    records: Sequence[JobRecord], capacity: int, busy_time: float
+    records: Sequence[JobRecord],
+    capacity: int,
+    busy_time: float,
+    classes: Optional[Sequence[MachineClass]] = None,
+    busy_by_class: Optional[Sequence[float]] = None,
 ) -> FleetStats:
     if not records:
         raise ValueError("no job records")
@@ -69,6 +78,16 @@ def compute_stats(
     cost = np.array([r.cost for r in records])
     t0 = min(r.arrival for r in records)
     makespan = max(r.finish for r in records) - t0
+    class_util = class_share = None
+    if classes is not None and busy_by_class is not None:
+        class_util = {
+            k.name: float(b / (k.slots * max(makespan, 1e-12)))
+            for k, b in zip(classes, busy_by_class)
+        }
+        class_share = {
+            k.name: sum(1 for r in records if r.machine_class == k.name) / len(records)
+            for k in classes
+        }
     return FleetStats(
         n_jobs=len(records),
         mean_sojourn=float(soj.mean()),
@@ -83,4 +102,6 @@ def compute_stats(
         sojourn_std_err=_batch_means_se(soj),
         mean_replicas=float(np.mean([r.n_replicas for r in records])),
         n_preempted=int(sum(r.n_preempted for r in records)),
+        class_utilization=class_util,
+        class_job_share=class_share,
     )

@@ -24,6 +24,23 @@ Semantics (DESIGN.md §9):
   * cost follows Definition 2: every copy is billed wall-clock from launch
     to first-finisher (or cancellation), summed per job and divided by n.
 
+Heterogeneous machine classes (`workload.MachineClass`): the pool may be a
+sequence of classes, each with a slot count and a speed multiplier; a copy
+launched on class k runs for duration/speed_k wall-clock.  Two placement
+modes:
+
+  * `placement="pooled"` (default) — copies are placed on individual slots,
+    fastest class first; a job's originals may span classes.  This is the
+    general work-conserving engine.
+  * `placement="aligned"` — gang-block placement: an admitted job reserves
+    `n_tasks` slots in ONE class until it finishes, and its replicas only
+    draw from its own reservation.  A job is admitted when some class has a
+    free gang block (fastest such class wins).  This mode is by
+    construction the exact discrete-event realization of the vectorized
+    Kiefer–Wolfowitz G/G/c model (`repro.fleet.vector`), which is why the
+    agreement tests run it: the fast path's oracle has the same semantics,
+    not merely similar statistics.
+
 An optional `OnlinePolicyController` supplies the policy for jobs that
 don't pin one, learning F̂_X from completed-task telemetry across jobs.
 """
@@ -44,7 +61,7 @@ from repro.core.policy import (
 )
 
 from .events import Event, EventHeap
-from .workload import Job
+from .workload import Job, MachineClass
 
 __all__ = ["FleetScheduler", "JobRecord"]
 
@@ -62,6 +79,7 @@ class JobRecord:
     n_replicas: int  # fresh copies actually launched
     n_preempted: int  # copies cancelled by admission preemption
     policy: str
+    machine_class: str = "default"  # class of the first original copy
 
     @property
     def sojourn(self) -> float:
@@ -81,6 +99,7 @@ class _Copy:
     start: float
     event: Event  # its copy_done event (cancel via heap)
     fresh: bool  # replica (vs original)
+    cls: int = 0  # machine-class index the copy's slot belongs to
     live: bool = True
 
 
@@ -102,13 +121,15 @@ class _RunningJob:
         self.t_start = t_start
         self.stages = stages  # ((p, r, keep), ...) remaining fork stages
         self.next_stage = 0
-        self.durations = durations  # original-copy durations (telemetry)
+        self.durations = durations  # base original-copy durations (telemetry)
         self.n_done = 0
         self.tasks = [_Task() for _ in range(job.n_tasks)]
         self.cost = 0.0
         self.n_replicas = 0
         self.n_preempted = 0
         self.fork_pending = False
+        self.home_class = 0  # reservation class (aligned) / first-copy class
+        self.n_live = 0  # live copies (bounds replicas in aligned mode)
 
     def stage_threshold(self) -> Optional[int]:
         """n_done count that triggers the next fork stage (None = no more)."""
@@ -133,7 +154,7 @@ def _normalize_stages(policy) -> tuple:
 class FleetScheduler:
     def __init__(
         self,
-        capacity: int,
+        capacity: Optional[int] = None,
         default_policy: SingleForkPolicy = BASELINE,
         discipline: str = "fifo",
         relaunch_delay: float = 0.0,
@@ -141,12 +162,40 @@ class FleetScheduler:
         fork_overhead: float = 0.0,
         controller: Optional[OnlinePolicyController] = None,
         seed: int = 0,
+        classes: Optional[Sequence[MachineClass]] = None,
+        placement: str = "pooled",
     ):
-        if capacity < 1:
+        if classes is None:
+            if capacity is None:
+                raise ValueError("need either capacity or machine classes")
+            classes = (MachineClass("default", int(capacity), 1.0),)
+        self.classes = tuple(classes)
+        if len({k.name for k in self.classes}) != len(self.classes):
+            raise ValueError("machine-class names must be unique")
+        total = sum(k.slots for k in self.classes)
+        if capacity is not None and capacity != total:
+            raise ValueError(
+                f"capacity={capacity} disagrees with class slots summing to {total}; "
+                "pass one or the other"
+            )
+        if total < 1:
             raise ValueError("capacity must be >= 1")
         if discipline not in ("fifo", "priority"):
             raise ValueError(f"unknown discipline {discipline!r}")
-        self.capacity = capacity
+        if placement not in ("pooled", "aligned"):
+            raise ValueError(f"unknown placement {placement!r}")
+        if placement == "aligned" and preempt_replicas:
+            # aligned admission is reservation-gated; cancelling another
+            # job's speculation can never free a reservation, so the knob
+            # would silently do nothing
+            raise ValueError("preempt_replicas has no effect under aligned placement")
+        self.capacity = total
+        self.placement = placement
+        # class indices, fastest first (stable: declaration order on ties) —
+        # shared placement preference with the vectorized fast path
+        self._class_order = sorted(
+            range(len(self.classes)), key=lambda i: -self.classes[i].speed
+        )
         self.default_policy = default_policy
         self.discipline = discipline
         self.relaunch_delay = relaunch_delay
@@ -159,12 +208,18 @@ class FleetScheduler:
         self.heap = EventHeap()
         self.queue: list[Job] = []
         self.running: dict[int, _RunningJob] = {}
-        self.free = capacity
+        self.free_by_class = [k.slots for k in self.classes]
+        self.reserved = [0] * len(self.classes)  # aligned-mode gang holds
         self.records: list[JobRecord] = []
         # instrumentation (conservation + utilization)
         self.max_busy = 0
         self.busy_time = 0.0  # integral of busy slots over time (copy-seconds)
+        self.busy_by_class = [0.0] * len(self.classes)
         self.now = 0.0
+
+    @property
+    def free(self) -> int:
+        return sum(self.free_by_class)
 
     # ------------------------------------------------------------------ run
     def run(self, jobs: Sequence[Job]) -> list[JobRecord]:
@@ -210,21 +265,40 @@ class FleetScheduler:
         # list order since arrivals push in time order)
         return min(self.queue, key=lambda j: j.priority)
 
+    def _aligned_class(self, job: Job) -> Optional[int]:
+        """Fastest class with a free `n_tasks` gang block (aligned mode)."""
+        for i in self._class_order:
+            if self.classes[i].slots - self.reserved[i] >= job.n_tasks:
+                return i
+        return None
+
+    def _can_admit(self, job: Job) -> bool:
+        if self.placement == "aligned":
+            return self._aligned_class(job) is not None
+        return self.free >= job.n_tasks
+
     def _try_admit(self) -> None:
         while True:
             job = self._next_queued()
             if job is None:
                 return
-            if job.n_tasks > self.capacity:
+            max_gang = (
+                max(k.slots for k in self.classes)
+                if self.placement == "aligned"
+                else self.capacity
+            )
+            if job.n_tasks > max_gang:
                 raise RuntimeError(
-                    f"job {job.job_id} needs {job.n_tasks} slots > capacity {self.capacity}"
+                    f"job {job.job_id} needs {job.n_tasks} slots > "
+                    f"{'largest class' if self.placement == 'aligned' else 'capacity'} "
+                    f"{max_gang}"
                 )
-            if self.free < job.n_tasks and self.preempt_replicas:
+            if not self._can_admit(job) and self.preempt_replicas:
                 self._preempt_for(job.n_tasks - self.free)
-            if self.free < job.n_tasks:
+            if not self._can_admit(job):
                 if self.discipline == "priority":
                     # try the next-most-urgent job that fits (backfill)
-                    fit = [j for j in self.queue if j.n_tasks <= self.free]
+                    fit = [j for j in self.queue if self._can_admit(j)]
                     if fit:
                         job = min(fit, key=lambda j: j.priority)
                     else:
@@ -269,36 +343,68 @@ class FleetScheduler:
         durations = np.asarray(job.dist.quantile(self.rng.random(n)), dtype=np.float64)
         rjob = _RunningJob(job, self.now, stages, durations)
         rjob.policy_label = policy.label() if hasattr(policy, "label") else "multifork"
+        if self.placement == "aligned":
+            cls = self._aligned_class(job)
+            assert cls is not None, "admitted a job with no free gang block"
+            rjob.home_class = cls
+            self.reserved[cls] += n
         self.running[job.job_id] = rjob
         for i in range(n):
             self._launch_copy(rjob, i, float(durations[i]), fresh=False)
+        if self.placement == "pooled":
+            # aligned mode's home_class is the reservation ledger key and
+            # stays authoritative; pooled mode derives it for reporting
+            rjob.home_class = rjob.tasks[0].copies[0].cls
         # degenerate n=1 fork stages can trigger at 0 completions
         self._maybe_schedule_fork(rjob)
 
     # -------------------------------------------------------------- copies
+    def _pick_class(self, rjob: _RunningJob) -> int:
+        """Slot class for the next copy: the job's reservation (aligned) or
+        the fastest class with a free slot (pooled)."""
+        if self.placement == "aligned":
+            assert self.free_by_class[rjob.home_class] > 0, "reservation over-committed"
+            return rjob.home_class
+        for i in self._class_order:
+            if self.free_by_class[i] > 0:
+                return i
+        raise AssertionError("launch with no free slot")
+
     def _launch_copy(self, rjob: _RunningJob, task_id: int, duration: float, fresh: bool):
+        """Launch one copy; `duration` is the base execution draw, stretched
+        by the slot's class speed (overheads folded in by the caller scale
+        too: a slow machine is slow at forking as well)."""
         assert self.free > 0, "launch with no free slot"
-        self.free -= 1
+        cls = self._pick_class(rjob)
+        self.free_by_class[cls] -= 1
         busy = self.capacity - self.free
         self.max_busy = max(self.max_busy, busy)
-        ev = self.heap.push(self.now + duration, "copy_done", (rjob.job.job_id, task_id))
-        copy = _Copy(start=self.now, event=ev, fresh=fresh)
+        wall = duration / self.classes[cls].speed
+        ev = self.heap.push(self.now + wall, "copy_done", (rjob.job.job_id, task_id))
+        copy = _Copy(start=self.now, event=ev, fresh=fresh, cls=cls)
         rjob.tasks[task_id].copies.append(copy)
+        rjob.n_live += 1
         ev.data = (rjob.job.job_id, task_id, copy)
         if fresh:
             rjob.n_replicas += 1
         return copy
 
+    def _bill_copy(self, rjob: _RunningJob, copy: _Copy) -> None:
+        """Shared settle path: bill wall-clock since launch, free the slot."""
+        copy.live = False
+        elapsed = self.now - copy.start
+        rjob.cost += elapsed
+        rjob.n_live -= 1
+        self.busy_time += elapsed
+        self.busy_by_class[copy.cls] += elapsed
+        self.free_by_class[copy.cls] += 1
+
     def _cancel_copy(self, rjob: _RunningJob, copy: _Copy) -> None:
         """Stop a running copy now: bill its runtime, free its slot."""
         if not copy.live:
             return
-        copy.live = False
         self.heap.cancel(copy.event)
-        elapsed = self.now - copy.start
-        rjob.cost += elapsed
-        self.busy_time += elapsed
-        self.free += 1
+        self._bill_copy(rjob, copy)
 
     def _on_copy_done(self, ev: Event) -> None:
         job_id, task_id, copy = ev.data
@@ -309,11 +415,7 @@ class FleetScheduler:
         assert not task.done, "finish event for a completed task survived"
         task.done = True
         # winner billed to now; siblings cancelled (their bill also to now)
-        copy.live = False
-        elapsed = self.now - copy.start
-        rjob.cost += elapsed
-        self.busy_time += elapsed
-        self.free += 1
+        self._bill_copy(rjob, copy)
         for c in task.live_copies:
             self._cancel_copy(rjob, c)
         rjob.n_done += 1
@@ -349,7 +451,12 @@ class FleetScheduler:
             if not keep:
                 for c in task.live_copies:
                     self._cancel_copy(rjob, c)
-            n_fresh = min(want, self.free)
+            if self.placement == "aligned":
+                # replicas draw from the job's own gang reservation only
+                budget = rjob.job.n_tasks - rjob.n_live
+            else:
+                budget = self.free
+            n_fresh = min(want, budget)
             if n_fresh:
                 fresh = np.asarray(
                     rjob.job.dist.quantile(self.rng.random(n_fresh)), dtype=np.float64
@@ -367,6 +474,8 @@ class FleetScheduler:
     def _finish_job(self, rjob: _RunningJob) -> None:
         job = rjob.job
         del self.running[job.job_id]
+        if self.placement == "aligned":
+            self.reserved[rjob.home_class] -= job.n_tasks
         self.records.append(
             JobRecord(
                 job_id=job.job_id,
@@ -378,6 +487,7 @@ class FleetScheduler:
                 n_replicas=rjob.n_replicas,
                 n_preempted=rjob.n_preempted,
                 policy=getattr(rjob, "policy_label", "?"),
+                machine_class=self.classes[rjob.home_class].name,
             )
         )
         if self.controller is not None:

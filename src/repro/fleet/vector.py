@@ -1,33 +1,46 @@
 """Vectorized fleet rollouts: the JAX fast path for policy sweeps.
 
-The event engine is exact but a Python loop; a sweep over (λ, p, r,
+The event engine is exact but a Python loop; a sweep over (λ, c, p, r,
 keep|kill) grids is thousands of runs.  This module fuses the whole sweep
-into device programs for the *dedicated-capacity* regime the event engine
-reduces to when `capacity == n_tasks`: gang admission then serializes jobs
-(a job only starts when the previous one has fully drained), so the fleet
-is an M/G/1 queue whose service time is the single-job makespan T(π) and
-whose per-job cost is C(π).  Concretely:
+into device programs for the *gang-aligned* regime: with `capacity =
+c·n_tasks` split into c gang blocks ("job slots"), admission serializes
+jobs onto whichever block frees first, so the fleet is a FIFO G/G/c queue
+whose per-job service time is the single-job makespan T(π) and whose
+per-job cost is C(π).  Concretely:
 
   * per-job (T, C) samples come from `repro.core.simulate.single_fork_batch`
     — the identical Definition 1/2 semantics the event path implements,
     with all randomness drawn in bulk (two uniform calls per sweep cell
     instead of one key split per job);
-  * the queue is the Lindley recursion start_j = max(arrival_j, finish_{j-1})
-    as a `lax.scan`; trials vmap on top, so an m-trial × n_jobs rollout is
-    one fused program;
+  * `c = 1` is the Lindley recursion start_j = max(arrival_j, finish_{j-1})
+    in closed form (`lindley`: cumsum + cummax, no sequential scan at all);
+  * `c > 1` is the Kiefer–Wolfowitz multi-server recursion (`kw_queue`):
+    the c-vector of slot-free times advances one job per `lax.scan` step —
+    the job takes the fastest idle slot, else the earliest-freeing one —
+    and trials/sweep cells vmap on top, so an entire (λ, c, π) grid is one
+    fused device program;
+  * heterogeneous machine classes (`workload.MachineClass`) enter as
+    per-slot speed multipliers: a job served by a speed-v slot stretches
+    its whole sample path by 1/v — T, C and the slot's busy time all scale
+    together, exactly matching the event engine's aligned placement
+    (`FleetScheduler(placement="aligned")`), which is the oracle the
+    agreement tests compare against;
   * for trace-driven workloads under π_kill, the residual draws
     Y = min of (r+1) fresh F̂_X samples go through the Pallas
     `kernels.residual_sampler` (eq. (7): F̄_Y = F̄_X^{r+1}), the same kernel
     Algorithm 1 uses — one kernel call covers every job of every trial.
 
-Agreement with the event path on shared configs (same λ, π, n,
-capacity=n) is within Monte-Carlo error; tests/test_fleet.py enforces it.
+Agreement with the event path on shared configs (same λ, π, n, aligned
+placement, per-class slots a multiple of n) is within Monte-Carlo error;
+tests/test_fleet.py enforces it, tests/test_fleet_properties.py checks the
+queue recursions' invariants (c=1 reduction, monotonicity in c and λ).
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,16 +49,28 @@ from repro.core.distributions import Distribution
 from repro.core.policy import SingleForkPolicy, num_stragglers
 from repro.core.simulate import single_fork_batch
 
-__all__ = ["VectorFleetResult", "fleet_rollout", "sweep", "trace_kill_rollout"]
+from .workload import MachineClass
+
+__all__ = [
+    "VectorFleetResult",
+    "fleet_rollout",
+    "kw_queue",
+    "lindley",
+    "sweep",
+    "trace_kill_rollout",
+]
 
 
 @dataclasses.dataclass
 class VectorFleetResult:
     sojourn: jnp.ndarray  # (m_trials, n_jobs)
     wait: jnp.ndarray  # (m_trials, n_jobs)
-    service: jnp.ndarray  # (m_trials, n_jobs) per-job T
-    cost: jnp.ndarray  # (m_trials, n_jobs) per-job C
+    service: jnp.ndarray  # (m_trials, n_jobs) per-job T (slot-speed scaled)
+    cost: jnp.ndarray  # (m_trials, n_jobs) per-job C (slot-speed scaled)
     utilization: jnp.ndarray  # (m_trials,)
+    slot: Optional[jnp.ndarray] = None  # (m_trials, n_jobs) serving job slot
+    class_utilization: Optional[jnp.ndarray] = None  # (m_trials, n_classes)
+    class_names: Optional[tuple] = None
 
     @property
     def mean_sojourn(self) -> float:
@@ -77,7 +102,12 @@ class VectorFleetResult:
         vals = _summary_jit(
             self.sojourn, self.wait, self.service, self.cost, self.utilization
         )
-        return dict(zip(_SUMMARY_KEYS, (float(v) for v in vals)))
+        out = dict(zip(_SUMMARY_KEYS, (float(v) for v in vals)))
+        if self.class_utilization is not None and self.class_names is not None:
+            per_class = jnp.mean(self.class_utilization, axis=0)
+            for name, u in zip(self.class_names, per_class):
+                out[f"util_{name}"] = float(u)
+        return out
 
 
 _SUMMARY_KEYS = (
@@ -113,26 +143,73 @@ def _summary_jit(sojourn, wait, service, cost, util):
     )
 
 
-def _lindley(arrivals, services):
-    """Gang-serial queue: start_j = max(arrival_j, finish_{j-1}).
+def lindley(arrivals, services):
+    """Gang-serial (c = 1) queue: start_j = max(arrival_j, finish_{j-1}).
 
     Closed form of the recursion — finish_j = P_j + max_{k<=j}(A_k - P_{k-1})
     with P the service prefix sum — so the queue is a cumsum + cummax
-    instead of an n_jobs-step sequential scan.
+    instead of an n_jobs-step sequential scan.  Returns (starts, finishes).
     """
     csum = jnp.cumsum(services)
     finishes = csum + jax.lax.cummax(arrivals - (csum - services))
     return finishes - services, finishes
 
 
+def kw_queue(arrivals, services, speeds):
+    """Kiefer–Wolfowitz FIFO G/G/c recursion with per-slot speeds.
+
+    State is the c-vector of slot-free times; job j takes the fastest slot
+    already idle at its arrival, else the earliest-freeing slot (ties break
+    toward lower index, i.e. faster, since `speeds` is sorted descending).
+    Its service requirement `services[j]` stretches to services[j]/speed on
+    the chosen slot.  With homogeneous speeds the free-time vector is the
+    (unsorted) Kiefer–Wolfowitz workload vector and the recursion is the
+    classical one; c = 1 reduces exactly to `lindley`.
+
+    Returns (starts, finishes, scaled_services, slots), each (n_jobs,).
+    """
+
+    def step(free, inp):
+        a, s = inp
+        idle = free <= a
+        slot = jnp.where(jnp.any(idle), jnp.argmax(idle), jnp.argmin(free))
+        start = jnp.maximum(a, free[slot])
+        svc = s / speeds[slot]
+        finish = start + svc
+        return free.at[slot].set(finish), (start, finish, svc, slot)
+
+    init = jnp.zeros_like(speeds)
+    _, outs = jax.lax.scan(step, init, (arrivals, services))
+    return outs
+
+
 def _queue_stats(arrivals, services, costs, n):
-    starts, finishes = _lindley(arrivals, services)
+    starts, finishes = lindley(arrivals, services)
     sojourn = finishes - arrivals
     wait = starts - arrivals
     # capacity = n slots; busy slot-time per job = n * C_j (Definition 2)
     makespan = finishes[-1] - arrivals[0]
     util = jnp.sum(costs) * n / (n * jnp.maximum(makespan, 1e-12))
     return sojourn, wait, util
+
+
+def _queue_stats_kw(arrivals, services, costs, speeds, slot_class, class_slots, n):
+    """Per-trial G/G/c stats: the job's (T, C) stretch by its slot's speed,
+    utilization aggregates busy copy-seconds per class."""
+    starts, finishes, svc, slots = kw_queue(arrivals, services, speeds)
+    sojourn = finishes - arrivals
+    wait = starts - arrivals
+    cost = costs / speeds[slots]
+    makespan = jnp.max(finishes) - arrivals[0]  # last finish need not be job -1
+    denom = jnp.maximum(makespan, 1e-12)
+    busy = cost * n  # copy-seconds per job (Definition 2, wall-clock billed)
+    slot_busy = jax.ops.segment_sum(busy, slots, num_segments=speeds.shape[0])
+    class_busy = jax.ops.segment_sum(
+        slot_busy, slot_class, num_segments=class_slots.shape[0]
+    )
+    util = jnp.sum(busy) / (speeds.shape[0] * n * denom)
+    class_util = class_busy / (class_slots * denom)
+    return sojourn, wait, svc, cost, util, slots, class_util
 
 
 @partial(jax.jit, static_argnames=("dist", "policy", "n", "n_jobs", "m_trials"))
@@ -148,6 +225,65 @@ def _rollout_jit(key, dist, policy, lam, n, n_jobs, m_trials):
     return sojourn, wait, T, C, util
 
 
+@partial(jax.jit, static_argnames=("dist", "policy", "n", "n_jobs", "m_trials"))
+def _rollout_kw_jit(key, dist, policy, lam, n, n_jobs, m_trials, speeds, slot_class, class_slots):
+    s = num_stragglers(n, policy.p)
+    ka, ks = jax.random.split(key)
+    inter = jax.random.exponential(ka, (m_trials, n_jobs)) / lam
+    arrivals = jnp.cumsum(inter, axis=1)
+    T, C = single_fork_batch(
+        ks, dist, n, s, policy.r, policy.keep, shape=(m_trials, n_jobs)
+    )
+    return _queue_kw_batch(arrivals, T, C, speeds, slot_class, class_slots, n)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _queue_kw_batch(arrivals, T, C, speeds, slot_class, class_slots, n):
+    """Batched KW queue over already-sampled (T, C) (trace-driven path)."""
+    return jax.vmap(
+        lambda a, t, c: _queue_stats_kw(a, t, c, speeds, slot_class, class_slots, n)
+    )(arrivals, T, C)
+
+
+def _slot_arrays(n: int, c: Optional[int], classes: Optional[Sequence[MachineClass]]):
+    """Resolve (c, classes) into per-job-slot arrays for the KW recursion.
+
+    Returns (speeds, slot_class, class_slots, names) with job slots ordered
+    fastest first — the same placement preference the aligned event engine
+    uses — or None when the plain c=1 Lindley path applies.
+    """
+    if classes is None:
+        if c is None or c == 1:
+            return None
+        if c < 1:
+            raise ValueError("c (job slots) must be >= 1")
+        speeds = jnp.ones((c,))
+        slot_class = jnp.zeros((c,), jnp.int32)
+        class_slots = jnp.array([float(c * n)])
+        return speeds, slot_class, class_slots, ("default",)
+    ordered = sorted(classes, key=lambda k: -k.speed)  # stable on ties
+    speeds, slot_class, class_slots = [], [], []
+    for i, k in enumerate(ordered):
+        if k.slots % n:
+            raise ValueError(
+                f"class {k.name!r}: slots={k.slots} must be a multiple of "
+                f"n_tasks={n} for the gang-aligned fast path"
+            )
+        speeds += [k.speed] * (k.slots // n)
+        slot_class += [i] * (k.slots // n)
+        class_slots.append(float(k.slots))
+    if c is not None and c != len(speeds):
+        raise ValueError(f"c={c} disagrees with classes providing {len(speeds)} job slots")
+    if not speeds:
+        raise ValueError("classes provide no job slots")
+    return (
+        jnp.array(speeds),
+        jnp.array(slot_class, jnp.int32),
+        jnp.array(class_slots),
+        tuple(k.name for k in ordered),
+    )
+
+
 def fleet_rollout(
     dist: Distribution,
     policy: SingleForkPolicy,
@@ -156,20 +292,45 @@ def fleet_rollout(
     n_jobs: int,
     m_trials: int = 32,
     key=None,
+    c: Optional[int] = None,
+    classes: Optional[Sequence[MachineClass]] = None,
 ) -> VectorFleetResult:
     """m_trials independent fleets of n_jobs Poisson(λ) arrivals.
 
-    `dist` must be hashable (the analytic families are frozen dataclasses);
-    trace workloads go through `trace_kill_rollout`.
+    `c` is the number of concurrent gang blocks (capacity = c·n slots);
+    `classes` optionally splits capacity into heterogeneous pools (each
+    class's slot count must divide into whole gang blocks).  c=1 without
+    classes takes the closed-form Lindley path; anything else runs the
+    Kiefer–Wolfowitz scan.  `dist` must be hashable (the analytic families
+    are frozen dataclasses); trace workloads go through
+    `trace_kill_rollout`.
     """
     if lam <= 0:
         raise ValueError("arrival rate lam must be > 0")
     if key is None:
         key = jax.random.PRNGKey(0)
-    sojourn, wait, T, C, util = _rollout_jit(
-        key, dist, policy, float(lam), n, n_jobs, m_trials
+    slot = _slot_arrays(n, c, classes)
+    if slot is None:
+        sojourn, wait, T, C, util = _rollout_jit(
+            key, dist, policy, float(lam), n, n_jobs, m_trials
+        )
+        return VectorFleetResult(
+            sojourn=sojourn, wait=wait, service=T, cost=C, utilization=util
+        )
+    speeds, slot_class, class_slots, names = slot
+    sojourn, wait, T, C, util, slots, class_util = _rollout_kw_jit(
+        key, dist, policy, float(lam), n, n_jobs, m_trials, speeds, slot_class, class_slots
     )
-    return VectorFleetResult(sojourn=sojourn, wait=wait, service=T, cost=C, utilization=util)
+    return VectorFleetResult(
+        sojourn=sojourn,
+        wait=wait,
+        service=T,
+        cost=C,
+        utilization=util,
+        slot=slots,
+        class_utilization=class_util,
+        class_names=names,
+    )
 
 
 def sweep(
@@ -180,11 +341,13 @@ def sweep(
     n_jobs: int,
     m_trials: int = 32,
     key=None,
+    c: Optional[int] = None,
+    classes: Optional[Sequence[MachineClass]] = None,
 ) -> list[dict]:
     """Load × policy frontier: one summary row per (λ, π) cell.
 
     λ enters the jitted rollout as a traced scalar, so the entire λ grid
-    reuses one compilation per policy.
+    reuses one compilation per (policy, c, class-mix).
     """
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -192,7 +355,9 @@ def sweep(
     for policy in policies:
         for lam in lams:
             key, sub = jax.random.split(key)
-            res = fleet_rollout(dist, policy, lam, n, n_jobs, m_trials, key=sub)
+            res = fleet_rollout(
+                dist, policy, lam, n, n_jobs, m_trials, key=sub, c=c, classes=classes
+            )
             rows.append(dict(lam=float(lam), policy=policy.label(), **res.summary()))
     return rows
 
@@ -210,6 +375,8 @@ def trace_kill_rollout(
     n_jobs: int,
     m_trials: int = 32,
     key=None,
+    c: Optional[int] = None,
+    classes: Optional[Sequence[MachineClass]] = None,
 ) -> VectorFleetResult:
     """Fleet rollout where task times bootstrap an empirical trace, π_kill.
 
@@ -254,5 +421,23 @@ def trace_kill_rollout(
 
     inter = jax.random.exponential(k2, (m_trials, n_jobs)) / lam
     arrivals = jnp.cumsum(inter, axis=1)
-    sojourn, wait, util = jax.vmap(partial(_queue_stats, n=n))(arrivals, T, C)
-    return VectorFleetResult(sojourn=sojourn, wait=wait, service=T, cost=C, utilization=util)
+    slot = _slot_arrays(n, c, classes)
+    if slot is None:
+        sojourn, wait, util = jax.vmap(partial(_queue_stats, n=n))(arrivals, T, C)
+        return VectorFleetResult(
+            sojourn=sojourn, wait=wait, service=T, cost=C, utilization=util
+        )
+    speeds, slot_class, class_slots, names = slot
+    sojourn, wait, T, C, util, slots, class_util = _queue_kw_batch(
+        arrivals, T, C, speeds, slot_class, class_slots, n
+    )
+    return VectorFleetResult(
+        sojourn=sojourn,
+        wait=wait,
+        service=T,
+        cost=C,
+        utilization=util,
+        slot=slots,
+        class_utilization=class_util,
+        class_names=names,
+    )

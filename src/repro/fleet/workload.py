@@ -15,6 +15,12 @@ literature cares about:
 
 Jobs with `policy=None` defer the replication decision to the scheduler
 (its default policy or the online controller); a per-job policy overrides.
+
+`MachineClass` describes one homogeneous pool of worker slots; a fleet's
+capacity is a sequence of classes (e.g. a fast pool and a cheaper slow
+pool whose `speed < 1` stretches every copy's execution time).  The class
+specs live here with the workload because together they define the offered
+load: ρ = λ·n·E[C] / Σ_k slots_k·speed_k in work units.
 """
 
 from __future__ import annotations
@@ -27,9 +33,36 @@ import numpy as np
 from repro.core.distributions import Distribution, Empirical
 from repro.core.policy import MultiForkPolicy, SingleForkPolicy
 
-__all__ = ["Job", "poisson_workload", "bursty_workload", "trace_workload"]
+__all__ = [
+    "Job",
+    "MachineClass",
+    "poisson_workload",
+    "bursty_workload",
+    "trace_workload",
+]
 
 Policy = Union[SingleForkPolicy, MultiForkPolicy]
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineClass:
+    """One homogeneous pool of worker slots.
+
+    `speed` is a service-rate multiplier: a copy whose base execution draw
+    is X runs for X / speed wall-clock seconds on this class (speed < 1 is
+    a slow pool, speed > 1 an accelerated one).  Cost (Definition 2) bills
+    wall-clock, so slow-pool copies are proportionally more expensive.
+    """
+
+    name: str
+    slots: int
+    speed: float = 1.0
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError(f"class {self.name!r}: slots must be >= 1")
+        if not self.speed > 0:
+            raise ValueError(f"class {self.name!r}: speed must be > 0")
 
 
 @dataclasses.dataclass

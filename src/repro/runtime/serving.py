@@ -100,17 +100,34 @@ class FleetHedgedServer:
 
     def __init__(
         self,
-        capacity: int,
-        latency_dist,
-        serve_fn: Callable[[object], object],
+        capacity: Optional[int] = None,
+        latency_dist=None,
+        serve_fn: Callable[[object], object] = None,
         policy: Optional[SingleForkPolicy] = None,
         adapt: bool = True,
-        preempt_replicas: bool = True,
+        preempt_replicas: Optional[bool] = None,
         seed: int = 0,
+        classes=None,
+        placement: str = "pooled",
     ):
+        """`capacity` is a single homogeneous replica pool; alternatively
+        pass `classes` (a sequence of `repro.fleet.MachineClass`, e.g. a
+        fast GPU pool plus a slow spot-instance pool) and a `placement`
+        mode — "aligned" reserves a one-class gang block per batch, which
+        is the regime the vectorized planner (`repro.fleet.vector`) models,
+        so capacity decisions simulated there transfer directly."""
         from repro.fleet import FleetConfig, FleetSim
 
-        self.capacity = capacity
+        if capacity is None and classes is None:
+            raise ValueError("need either capacity or classes")
+        if latency_dist is None or serve_fn is None:
+            raise ValueError("latency_dist and serve_fn are required")
+        if preempt_replicas is None:
+            # default: hedge-yielding admission, except where it has no
+            # effect (aligned); an EXPLICIT True still reaches the
+            # scheduler, which rejects the combination like FleetSim does
+            preempt_replicas = placement != "aligned"
+        self.capacity = capacity if capacity is not None else sum(k.slots for k in classes)
         self.latency_dist = latency_dist
         self.serve_fn = serve_fn
         self.sim = FleetSim(
@@ -120,6 +137,8 @@ class FleetHedgedServer:
                 preempt_replicas=preempt_replicas,
                 adapt=adapt,
                 seed=seed,
+                classes=classes,
+                placement=placement,
             )
         )
 

@@ -18,6 +18,7 @@ from repro.fleet import (
     FleetConfig,
     FleetSim,
     Job,
+    MachineClass,
     bursty_workload,
     poisson_workload,
     trace_workload,
@@ -190,6 +191,7 @@ def test_multifork_policy_runs():
     assert rep.records[0].finish > 0
 
 
+@pytest.mark.slow
 def test_adaptive_controller_engages():
     jobs = poisson_workload(40, rate=0.5, n_tasks=16, dist=DIST, seed=2)
     sim = FleetSim(FleetConfig(capacity=16, adapt=True, seed=2))
@@ -235,6 +237,7 @@ def test_duplicate_job_ids_rejected():
     ],
     ids=["baseline", "keep", "kill"],
 )
+@pytest.mark.slow
 def test_vector_agrees_with_event_engine(policy):
     """capacity == n makes the event engine exactly the gang-serial queue
     the vectorized path models; means must agree within combined MC error."""
@@ -249,6 +252,115 @@ def test_vector_agrees_with_event_engine(policy):
     se = float(np.hypot(np.std(soj) / np.sqrt(len(soj)), res.sojourn_std_err))
     assert abs(np.mean(soj) - res.mean_sojourn) < 5 * se + 0.05
     assert abs(np.mean(cost) - res.mean_cost) < 0.1
+
+
+def test_vector_kw_agrees_with_event_engine_c3():
+    """c = 3 gang blocks under aligned placement: the event engine realizes
+    exactly the Kiefer-Wolfowitz G/G/c model the vectorized path runs, so
+    means must agree within combined MC error."""
+    policy = SingleForkPolicy(0.2, 1, True)
+    n, n_jobs, lam, c = 10, 200, 0.45, 3
+    soj, cost, wait = [], [], []
+    for seed in range(6):
+        jobs = poisson_workload(n_jobs, rate=lam, n_tasks=n, dist=DIST, seed=seed)
+        rep = FleetSim(
+            FleetConfig(capacity=c * n, policy=policy, seed=seed, placement="aligned")
+        ).run(jobs)
+        soj.append(rep.stats.mean_sojourn)
+        cost.append(rep.stats.mean_cost)
+        wait.append(rep.stats.mean_wait)
+    res = vector.fleet_rollout(DIST, policy, lam, n, n_jobs, m_trials=32, c=c)
+    se = float(np.hypot(np.std(soj) / np.sqrt(len(soj)), res.sojourn_std_err))
+    assert abs(np.mean(soj) - res.mean_sojourn) < 5 * se + 0.05
+    assert abs(np.mean(cost) - res.mean_cost) < 0.1
+    # with 3 blocks at this load the queue is light but not empty
+    assert 0.0 < res.mean_wait < res.mean_sojourn
+
+
+def test_vector_kw_agrees_with_event_engine_two_classes():
+    """Two-class fleet (fast pool + half-speed pool), aligned placement:
+    sojourn/cost and the per-class utilization split agree within 5 sigma."""
+    policy = SingleForkPolicy(0.2, 1, True)
+    n, n_jobs, lam = 10, 200, 0.35
+    classes = (MachineClass("fast", 2 * n, 1.0), MachineClass("slow", n, 0.5))
+    soj, cost, util_slow, share_slow = [], [], [], []
+    for seed in range(6):
+        jobs = poisson_workload(n_jobs, rate=lam, n_tasks=n, dist=DIST, seed=seed)
+        rep = FleetSim(
+            FleetConfig(policy=policy, seed=seed, classes=classes, placement="aligned")
+        ).run(jobs)
+        soj.append(rep.stats.mean_sojourn)
+        cost.append(rep.stats.mean_cost)
+        util_slow.append(rep.stats.class_utilization["slow"])
+        share_slow.append(rep.stats.class_job_share["slow"])
+    res = vector.fleet_rollout(DIST, policy, lam, n, n_jobs, m_trials=32, classes=classes)
+    se = float(np.hypot(np.std(soj) / np.sqrt(len(soj)), res.sojourn_std_err))
+    assert abs(np.mean(soj) - res.mean_sojourn) < 5 * se + 0.05
+    assert abs(np.mean(cost) - res.mean_cost) < 0.1
+    s = res.summary()
+    assert abs(np.mean(util_slow) - s["util_slow"]) < 0.05
+    # slow job-slot is index 2 (slots are ordered fastest first)
+    vec_share_slow = float(np.mean(np.asarray(res.slot) == 2))
+    assert abs(np.mean(share_slow) - vec_share_slow) < 0.05
+    # overflow only: most jobs should be served by the fast pool
+    assert np.mean(share_slow) < 0.5
+
+
+def test_class_aware_placement_conserves_capacity():
+    """Neither class pool is ever over-committed, in either placement mode,
+    and per-class busy time is consistent with total busy time."""
+    pol = SingleForkPolicy(p=0.4, r=2, keep=False)
+    classes = (MachineClass("fast", 24, 1.0), MachineClass("slow", 12, 0.5))
+    jobs = poisson_workload(50, rate=1.0, n_tasks=12, dist=DIST, seed=5, policy=pol)
+    for placement in ("pooled", "aligned"):
+        sim = FleetSim(FleetConfig(classes=classes, placement=placement, seed=5))
+        rep = sim.run(jobs)
+        assert len(rep.records) == 50
+        assert rep.max_busy <= 36
+        assert rep.capacity == 36
+        # class bookkeeping: busy split sums to the global busy integral
+        assert rep.stats.class_utilization is not None
+        total = sum(
+            rep.stats.class_utilization[k.name] * k.slots for k in classes
+        )
+        assert total == pytest.approx(rep.busy_time / max(
+            max(r.finish for r in rep.records) - min(r.arrival for r in rep.records),
+            1e-12,
+        ), rel=1e-6)
+        for r in rep.records:
+            assert r.machine_class in ("fast", "slow")
+    # free-slot and reservation ledgers drain back to idle after the run
+    from repro.fleet import FleetScheduler
+
+    for placement in ("pooled", "aligned"):
+        sched = FleetScheduler(classes=classes, placement=placement, seed=5)
+        sched.run(jobs)
+        assert sched.free_by_class == [k.slots for k in classes]
+        assert sched.reserved == [0, 0]
+        assert sched.free == 36
+
+
+def test_aligned_placement_slow_pool_only_on_overflow():
+    """A single job on an idle two-class fleet lands on the fast pool and
+    runs faster than the same job forced onto the slow pool."""
+    classes = (MachineClass("fast", 8, 2.0), MachineClass("slow", 8, 0.5))
+    jobs = [Job(job_id=0, arrival=0.0, n_tasks=8, dist=DIST)]
+    rep = FleetSim(FleetConfig(classes=classes, placement="aligned", seed=0)).run(jobs)
+    assert rep.records[0].machine_class == "fast"
+    slow_only = (MachineClass("slow", 8, 0.5),)
+    rep_slow = FleetSim(FleetConfig(classes=slow_only, placement="aligned", seed=0)).run(jobs)
+    assert rep_slow.records[0].machine_class == "slow"
+    # same seed => same base draws; speed 2.0 vs 0.5 is a 4x pathwise ratio
+    assert rep_slow.records[0].service == pytest.approx(
+        4.0 * rep.records[0].service, rel=1e-9
+    )
+
+
+def test_aligned_preempt_combination_rejected():
+    with pytest.raises(ValueError, match="aligned"):
+        FleetSim(
+            FleetConfig(capacity=16, placement="aligned", preempt_replicas=True)
+        ).run([Job(job_id=0, arrival=0.0, n_tasks=4, dist=DIST)])
 
 
 def test_vector_trace_kernel_path_agrees_with_simulate():
@@ -338,3 +450,37 @@ def test_fleet_hedged_server_values_and_stats():
     assert stats.n_jobs == 6
     for o in outcomes:
         assert o.finish >= o.start >= o.arrival
+
+
+def test_fleet_hedged_server_accepts_class_mix():
+    """Serving on a heterogeneous replica pool: values are unchanged, the
+    per-class utilization split is reported, and capacity derives from the
+    class specs."""
+    classes = (MachineClass("gpu", 16, 1.0), MachineClass("spot", 8, 0.5))
+    srv = FleetHedgedServer(
+        latency_dist=ShiftedExp(0.01, 20.0),
+        serve_fn=lambda r: r + 1,
+        adapt=False,
+        seed=1,
+        classes=classes,
+        placement="aligned",
+    )
+    assert srv.capacity == 24
+    batches = [list(range(i, i + 8)) for i in range(6)]
+    outcomes, stats = srv.serve_stream(batches, rate=5.0, seed=2)
+    assert [o.values for o in outcomes] == [[r + 1 for r in b] for b in batches]
+    assert set(stats.class_utilization) == {"gpu", "spot"}
+    assert stats.class_job_share["gpu"] + stats.class_job_share["spot"] == pytest.approx(1.0)
+    with pytest.raises(ValueError, match="capacity or classes"):
+        FleetHedgedServer(serve_fn=lambda r: r)
+    # an EXPLICIT preempt_replicas=True under aligned placement is rejected
+    # (same contract as FleetSim); the default merely adapts per placement
+    srv2 = FleetHedgedServer(
+        capacity=16,
+        latency_dist=ShiftedExp(0.01, 20.0),
+        serve_fn=lambda r: r,
+        preempt_replicas=True,
+        placement="aligned",
+    )
+    with pytest.raises(ValueError, match="aligned"):
+        srv2.serve_stream([[1, 2]], rate=1.0)

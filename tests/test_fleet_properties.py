@@ -1,0 +1,232 @@
+"""Property tests for the queueing recursions behind `repro.fleet.vector`:
+the closed-form Lindley path (c = 1) and the Kiefer–Wolfowitz G/G/c scan
+must satisfy the structural invariants queueing theory promises, for ANY
+arrival/service sample path — not just the Poisson/ShiftedExp configs the
+agreement tests happen to run.  Plain (non-@given) tests pin the same
+invariants on fixed adversarial paths so the file still bites when
+hypothesis is absent.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_stubs import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
+
+from repro.fleet import vector
+
+# strategies: short positive float arrays; one shared shape so inter-arrival
+# and service lists zip into jobs
+_floats = st.floats(min_value=1e-3, max_value=50.0, allow_nan=False, allow_infinity=False)
+_paths = st.lists(st.tuples(_floats, _floats), min_size=1, max_size=40)
+
+
+def _queues(pairs):
+    inter = np.array([p[0] for p in pairs])
+    services = np.array([p[1] for p in pairs])
+    return jnp.cumsum(jnp.asarray(inter)), jnp.asarray(services)
+
+
+def _tol(*arrays):
+    """float32 scale-aware tolerance: comparisons between two queue runs
+    differ by a few ulps of the largest time on the path."""
+    hi = max(float(jnp.max(jnp.abs(a))) for a in arrays)
+    return 1e-4 + 3e-6 * hi
+
+
+def _kw(arrivals, services, c, speeds=None):
+    if speeds is None:
+        speeds = jnp.ones((c,))
+    return vector.kw_queue(arrivals, services, speeds)
+
+
+# ------------------------------------------------------- c = 1 reduction
+
+
+@given(pairs=_paths)
+@settings(max_examples=60, deadline=None)
+def test_kw_c1_reduces_to_lindley(pairs):
+    """One slot: the KW scan IS the Lindley recursion, path by path."""
+    arrivals, services = _queues(pairs)
+    s_lin, f_lin = vector.lindley(arrivals, services)
+    s_kw, f_kw, svc, slots = _kw(arrivals, services, c=1)
+    tol = _tol(f_lin)
+    np.testing.assert_allclose(np.asarray(s_kw), np.asarray(s_lin), rtol=1e-5, atol=tol)
+    np.testing.assert_allclose(np.asarray(f_kw), np.asarray(f_lin), rtol=1e-5, atol=tol)
+    assert np.all(np.asarray(slots) == 0)
+
+
+def test_kw_c1_reduces_to_lindley_fixed():
+    """The same reduction on a fixed bursty path (runs without hypothesis)."""
+    arrivals = jnp.array([0.1, 0.1001, 0.1002, 5.0, 5.5])
+    services = jnp.array([3.0, 0.01, 4.0, 0.5, 10.0])
+    s_lin, f_lin = vector.lindley(arrivals, services)
+    s_kw, f_kw, _, _ = _kw(arrivals, services, c=1)
+    np.testing.assert_allclose(np.asarray(f_kw), np.asarray(f_lin), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_kw), np.asarray(s_lin), rtol=1e-6)
+
+
+# ---------------------------------------------------- basic sanity bounds
+
+
+@given(pairs=_paths, c=st.integers(min_value=1, max_value=5))
+@settings(max_examples=60, deadline=None)
+def test_sojourn_ge_service_ge_zero(pairs, c):
+    """start >= arrival, service > 0, sojourn = wait + service >= service."""
+    arrivals, services = _queues(pairs)
+    starts, finishes, svc, _ = _kw(arrivals, services, c=c)
+    starts, finishes, svc = map(np.asarray, (starts, finishes, svc))
+    a = np.asarray(arrivals)  # float32, same dtype the queue computed in
+    tol = _tol(finishes)
+    assert np.all(starts >= a)  # start = max(arrival, free): exact in f32
+    assert np.all(svc > 0)
+    np.testing.assert_allclose(finishes - starts, svc, rtol=1e-5, atol=tol)
+    assert np.all(finishes - a >= svc - tol)  # sojourn >= service
+
+
+@given(pairs=_paths)
+@settings(max_examples=40, deadline=None)
+def test_heterogeneous_speeds_scale_service(pairs):
+    """Whatever slot serves a job, its service stretches by exactly that
+    slot's speed; slot indices stay in range."""
+    arrivals, services = _queues(pairs)
+    speeds = jnp.array([2.0, 1.0, 0.5])
+    starts, finishes, svc, slots = _kw(arrivals, services, 3, speeds=speeds)
+    sl = np.asarray(slots)
+    assert sl.min() >= 0 and sl.max() < 3
+    expected = np.asarray(services) / np.asarray(speeds)[sl]
+    np.testing.assert_allclose(np.asarray(svc), expected, rtol=1e-5)
+
+
+# ------------------------------------------------ monotonicity properties
+
+
+@given(pairs=_paths, c=st.integers(min_value=1, max_value=4))
+@settings(max_examples=60, deadline=None)
+def test_waits_monotone_nonincreasing_in_c(pairs, c):
+    """Adding a (homogeneous) server never lengthens any job's wait on the
+    same sample path — the classical KW coupling argument."""
+    arrivals, services = _queues(pairs)
+    s_lo, f_lo, _, _ = _kw(arrivals, services, c=c)
+    s_hi, _, _, _ = _kw(arrivals, services, c=c + 1)
+    w_lo = np.asarray(s_lo) - np.asarray(arrivals)
+    w_hi = np.asarray(s_hi) - np.asarray(arrivals)
+    assert np.all(w_hi <= w_lo + _tol(f_lo))
+
+
+@given(pairs=_paths, c=st.integers(min_value=1, max_value=4),
+       scale=st.floats(min_value=1.01, max_value=10.0))
+@settings(max_examples=60, deadline=None)
+def test_waits_monotone_nondecreasing_in_lambda(pairs, c, scale):
+    """Scaling the arrival rate up (inter-arrivals down) on the same service
+    draws never shortens any wait: Lindley/KW are monotone in each I_j."""
+    arrivals, services = _queues(pairs)
+    fast = arrivals / scale
+    s_lo, f_lo, _, _ = _kw(arrivals, services, c=c)
+    s_hi, _, _, _ = _kw(fast, services, c=c)
+    w_lo = np.asarray(s_lo) - np.asarray(arrivals)
+    w_hi = np.asarray(s_hi) - np.asarray(fast)
+    assert np.all(w_hi >= w_lo - _tol(f_lo))
+
+
+def test_waits_monotone_fixed_burst():
+    """Fixed heavy burst: waits drop as c grows, until c covers the burst."""
+    arrivals = jnp.array([0.1, 0.2, 0.3, 0.4])
+    services = jnp.array([10.0, 10.0, 10.0, 10.0])
+    waits = []
+    for c in (1, 2, 4):
+        starts, _, _, _ = _kw(arrivals, services, c=c)
+        waits.append(float(jnp.sum(starts - arrivals)))
+    assert waits[0] > waits[1] > waits[2]
+    assert waits[2] == pytest.approx(0.0, abs=1e-6)
+
+
+# -------------------------------------------- FIFO permutation invariance
+
+
+@given(pairs=st.lists(st.tuples(_floats, _floats), min_size=2, max_size=30),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_tied_arrival_permutation_invariance_c1(pairs, seed):
+    """c = 1 is work-conserving, so the workload process — and hence the
+    clearing time of the final busy period (the last finish) — depends on
+    simultaneous arrivals only through their TOTAL work: permuting which
+    tied job carries which service time must not move the last finish.
+    (Individual sojourns do move, and c > 1 genuinely breaks this — a big
+    job pinned to one server changes the makespan — so FIFO implies the
+    invariance exactly here and the test claims no more.)"""
+    rng = np.random.default_rng(seed)
+    inter = np.array([p[0] for p in pairs])
+    services = np.array([p[1] for p in pairs])
+    # quantize to force genuine arrival ties (several jobs per instant)
+    arrivals = np.floor(np.cumsum(inter) / 25.0) * 25.0
+    perm = rng.permutation(len(pairs))
+    order = np.argsort(arrivals[perm], kind="stable")
+    a2, s2 = arrivals[perm][order], services[perm][order]
+    assert np.array_equal(a2, arrivals)  # same instants, services reshuffled
+    _, f1 = vector.lindley(jnp.asarray(arrivals), jnp.asarray(services))
+    _, f2 = vector.lindley(jnp.asarray(a2), jnp.asarray(s2))
+    last1, last2 = float(jnp.max(f1)), float(jnp.max(f2))
+    assert last1 == pytest.approx(last2, rel=1e-4)
+    # and the KW scan at c=1 sees the identical clearing time
+    _, f3, _, _ = _kw(jnp.asarray(a2), jnp.asarray(s2), c=1)
+    assert float(jnp.max(f3)) == pytest.approx(last1, rel=1e-4)
+
+
+@given(services=st.lists(_floats, min_size=1, max_size=30),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_batch_busy_period_service_permutation_invariant(services, seed):
+    """c = 1, simultaneous arrivals: the server drains total work ΣS no
+    matter the FIFO order, so the LAST finish is service-permutation
+    invariant (individual sojourns of course are not)."""
+    rng = np.random.default_rng(seed)
+    s = np.array(services)
+    arrivals = jnp.full((len(s),), 1.0)
+    _, f1 = vector.lindley(arrivals, jnp.asarray(s))
+    _, f2 = vector.lindley(arrivals, jnp.asarray(rng.permutation(s)))
+    # f32 cumsum reassociation: a few ulps of the total drained work
+    assert float(f1[-1]) == pytest.approx(float(f2[-1]), rel=1e-4)
+
+
+# ---------------------------------------- rollout-level glue invariants
+
+
+def test_fleet_rollout_c_dispatch_and_validation():
+    from repro.core import ShiftedExp, SingleForkPolicy
+
+    dist, pol = ShiftedExp(1.0, 1.0), SingleForkPolicy(0.2, 1, True)
+    r1 = vector.fleet_rollout(dist, pol, 0.1, 8, 50, m_trials=4)
+    assert r1.slot is None  # closed-form Lindley path
+    r2 = vector.fleet_rollout(dist, pol, 0.1, 8, 50, m_trials=4, c=3)
+    assert r2.slot is not None and int(jnp.max(r2.slot)) <= 2
+    with pytest.raises(ValueError):
+        vector.fleet_rollout(dist, pol, 0.1, 8, 50, m_trials=4, c=0)
+    from repro.fleet import MachineClass
+
+    with pytest.raises(ValueError, match="multiple"):
+        vector.fleet_rollout(
+            dist, pol, 0.1, 8, 50, m_trials=4, classes=(MachineClass("x", 12),)
+        )
+    with pytest.raises(ValueError, match="disagrees"):
+        vector.fleet_rollout(
+            dist, pol, 0.1, 8, 50, m_trials=4, c=3, classes=(MachineClass("x", 16),)
+        )
+
+
+def test_fleet_rollout_more_slots_never_hurts():
+    """Same seed, growing c: mean wait is non-increasing, and with classes
+    sorted fastest-first the fastest class takes the largest job share."""
+    from repro.core import ShiftedExp, SingleForkPolicy
+    from repro.fleet import MachineClass
+
+    dist, pol = ShiftedExp(1.0, 1.0), SingleForkPolicy(0.2, 1, True)
+    waits = [
+        vector.fleet_rollout(dist, pol, 0.4, 8, 200, m_trials=16, c=c).mean_wait
+        for c in (1, 2, 4)
+    ]
+    assert waits[0] >= waits[1] >= waits[2]
+    classes = (MachineClass("fast", 16, 1.0), MachineClass("slow", 16, 0.25))
+    res = vector.fleet_rollout(dist, pol, 0.4, 8, 200, m_trials=16, classes=classes)
+    share_fast = float(jnp.mean(res.slot < 2))  # fast contributes slots 0-1
+    assert share_fast > 0.5

@@ -1,0 +1,87 @@
+"""Golden regression pins for the paper-facing analysis numbers.
+
+`core/analysis.py` is the reference every other layer is validated
+against (closed forms, Monte-Carlo, the fleet fast path), so a silent
+shift there would cascade invisibly — simulation-vs-analysis tests use
+5σ tolerances and would absorb a small systematic drift.  These tests pin
+the Theorem 1 quadrature and the Theorem 2/3 closed forms to hard-coded
+constants produced by the current implementation, with tolerances tight
+enough (2e-4 relative for float32 quadrature, 1e-12 for pure-Python
+closed forms) that any change to grids, integration method, or formulas
+must consciously regenerate the constants below.
+
+Regenerate with:
+    PYTHONPATH=src python -c "from tests.test_golden_analysis import _regen; _regen()"
+"""
+
+import pytest
+
+from repro.core.analysis import (
+    corollary1_exponent,
+    theorem1,
+    theorem2_cost,
+    theorem2_latency,
+    theorem3_cost,
+    theorem3_latency,
+)
+from repro.core.distributions import Pareto, ShiftedExp, Uniform
+from repro.core.policy import BASELINE, SingleForkPolicy
+
+# (dist, n, policy) -> (E[T], E[C]) from the Theorem 1 numeric quadrature.
+# float32 device quadrature: pinned at 2e-4 relative.
+THEOREM1_GOLDEN = [
+    (ShiftedExp(1.0, 1.0), 100, BASELINE, 6.187349, 2.0),
+    (ShiftedExp(1.0, 1.0), 100, SingleForkPolicy(0.1, 1, True), 5.266364, 2.063212),
+    (ShiftedExp(1.0, 1.0), 100, SingleForkPolicy(0.1, 1, False), 5.767068, 2.200000),
+    (ShiftedExp(1.0, 1.0), 100, SingleForkPolicy(0.2, 2, True), 4.475344, 2.252848),
+    (ShiftedExp(1.0, 1.0), 400, SingleForkPolicy(0.05, 1, False), 6.794599, 2.100000),
+    (ShiftedExp(2.0, 0.5), 100, SingleForkPolicy(0.1, 1, True), 10.532727, 4.126424),
+    (Pareto(2.0, 1.0), 100, BASELINE, 17.692146, 2.0),
+    (Pareto(2.0, 1.0), 100, SingleForkPolicy(0.1, 1, True), 5.826447, 1.903384),
+    (Pareto(2.0, 1.0), 100, SingleForkPolicy(0.1, 1, False), 5.361716, 1.950437),
+    (Pareto(2.0, 1.0), 400, SingleForkPolicy(0.2, 2, False), 4.581158, 2.272785),
+    (Pareto(3.0, 2.0), 100, SingleForkPolicy(0.2, 1, False), 7.152251, 3.618003),
+    (Uniform(0.5, 1.5), 100, SingleForkPolicy(0.1, 1, False), 2.629740, 1.161667),
+]
+
+_IDS = [
+    f"{type(d).__name__}-n{n}-{p.label()}" for d, n, p, _, _ in THEOREM1_GOLDEN
+]
+
+
+@pytest.mark.parametrize("dist,n,policy,latency,cost", THEOREM1_GOLDEN, ids=_IDS)
+def test_theorem1_quadrature_pinned(dist, n, policy, latency, cost):
+    lc = theorem1(dist, policy, n)
+    assert lc.latency == pytest.approx(latency, rel=2e-4)
+    assert lc.cost == pytest.approx(cost, rel=2e-4)
+
+
+# Closed forms are pure Python math: pinned to double precision.
+def test_theorem2_closed_forms_pinned():
+    d = ShiftedExp(1.0, 1.0)
+    keep, kill = SingleForkPolicy(0.1, 1, True), SingleForkPolicy(0.1, 1, False)
+    assert theorem2_latency(d, keep, 100) == pytest.approx(5.242485471941835, rel=1e-12)
+    assert theorem2_cost(d, keep) == pytest.approx(2.0632120558828557, rel=1e-12)
+    # the printed eq. (11) (paper erratum: spurious +pΔ) stays reproducible
+    assert theorem2_cost(d, keep, as_published=True) == pytest.approx(
+        2.163212055882856, rel=1e-12
+    )
+    assert theorem2_latency(d, kill, 100) == pytest.approx(5.742485471941835, rel=1e-12)
+    assert theorem2_cost(d, kill) == pytest.approx(2.2, rel=1e-12)
+
+
+def test_theorem3_closed_forms_pinned():
+    p = Pareto(2.0, 1.0)
+    keep, kill = SingleForkPolicy(0.1, 1, True), SingleForkPolicy(0.1, 1, False)
+    assert theorem3_latency(p, kill, 100) == pytest.approx(5.341410950879998, rel=1e-12)
+    assert theorem3_cost(p, kill) == pytest.approx(1.9504389006498286, rel=1e-12)
+    # keep-mode terms route through ResidualDistribution numerics: float32
+    assert theorem3_latency(p, keep, 100) == pytest.approx(5.55722600472537, rel=2e-4)
+    assert theorem3_cost(p, keep) == pytest.approx(1.9033844986163406, rel=2e-4)
+    assert corollary1_exponent(2.0, 1) == pytest.approx(0.25, rel=1e-12)
+
+
+def _regen():  # pragma: no cover - developer helper
+    for dist, n, policy, _, _ in THEOREM1_GOLDEN:
+        lc = theorem1(dist, policy, n)
+        print(f"({dist!r}, {n}, {policy!r}, {lc.latency:.6f}, {lc.cost:.6f}),")

@@ -1,6 +1,10 @@
 """Per-architecture smoke tests (reduced configs): forward/train step on
 CPU, output shapes, no NaNs, decode-vs-forward consistency, and a real
-gradient step."""
+gradient step.
+
+Whole module is `slow`: ten architectures x jit compiles is minutes of
+wall-clock; the fast tier (`pytest -m "not slow"`) covers the queueing /
+analysis stack and CI runs this tier in its own job."""
 
 import jax
 import jax.numpy as jnp
@@ -9,6 +13,8 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.models.lm import build_model
+
+pytestmark = pytest.mark.slow
 
 KEY = jax.random.PRNGKey(0)
 B, S = 2, 16

@@ -16,6 +16,7 @@ from repro.core import (
 P_GRID = np.arange(0.05, 0.45, 0.05)
 
 
+@pytest.mark.slow
 def test_latency_sensitive_respects_budget():
     ev = analytic_evaluator(Pareto(2.0, 2.0), 400)
     best, base = optimize_latency_sensitive(ev, r_max=3, p_grid=P_GRID)
@@ -23,6 +24,7 @@ def test_latency_sensitive_respects_budget():
     assert best.latency < 0.5 * base.latency  # Pareto tail: huge win available
 
 
+@pytest.mark.slow
 def test_cost_sensitive_improves_objective():
     lam, n = 0.1, 400
     ev = analytic_evaluator(Pareto(2.0, 2.0), n)
@@ -30,6 +32,7 @@ def test_cost_sensitive_improves_objective():
     assert best.latency + lam * n * best.cost <= base.latency + lam * n * base.cost
 
 
+@pytest.mark.slow
 def test_shifted_exp_prefers_keep():
     """'New-longer-than-used' => optimizer should land on keep (Lemma 1)."""
     ev = analytic_evaluator(ShiftedExp(1.0, 1.0), 400)

@@ -101,6 +101,7 @@ def _tiny_trainer(tmp_path, literal=False, policy=None, **cluster_kw):
     return trainer, cfg, model, grad_fn
 
 
+@pytest.mark.slow
 def test_literal_replicas_match_global_grad(tmp_path):
     """Masked per-shard average == global-batch gradient (soundness of the
     compute-once shortcut)."""
@@ -122,6 +123,7 @@ def test_literal_replicas_match_global_grad(tmp_path):
         )
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_resumes(tmp_path):
     from repro.data import SyntheticTokenPipeline
 
@@ -178,6 +180,7 @@ def test_hedged_serving_tail_improvement():
     assert np.mean(stats_hedged) < 0.7 * np.mean(stats_base)
 
 
+@pytest.mark.slow
 def test_online_adaptation_converges():
     """Controller should move off the default toward keep on a
     new-longer-than-used trace."""

@@ -26,6 +26,9 @@ from repro.core import (
 from repro.data import SyntheticTokenPipeline, synthesize_trace
 from repro.runtime import SimCluster, StragglerAwareTrainer, TrainerConfig
 
+# end-to-end chaos/training runs: ~15s apiece, slow-tier only
+pytestmark = pytest.mark.slow
+
 
 def test_headline_latency_and_cost_reduction():
     dist = Pareto(2.0, 2.0)
