@@ -15,7 +15,15 @@ Five measurements:
   * a shared-capacity event sweep (capacity = 3n, pooled placement)
     showing the fleet-only effect: aggressive replication raises per-job
     cost, hence offered load, and collapses under queueing while small-p
-    forking does not.
+    forking does not;
+  * the adaptive-vs-fixed frontier under a regime change: every fixed
+    policy on the full two-regime workload vs `FleetConfig(adapt=True)`,
+    whose `FleetPolicyController` re-plans through the vectorized KW
+    policy search (`vector.policy_search` — the whole candidate grid is
+    one fused device program; no per-candidate event-engine sweeps).
+    Gated: the adaptive mean sojourn must beat the best fixed policy
+    *chosen on the pre-shift regime*, i.e. what an operator who tuned
+    before the shift would have deployed.
 
 Artifact: benchmarks/results/fleet_frontier.json.
 """
@@ -27,7 +35,14 @@ import time
 import numpy as np
 
 from repro.core import ShiftedExp, SingleForkPolicy
-from repro.fleet import FleetConfig, FleetSim, MachineClass, poisson_workload, vector
+from repro.fleet import (
+    REGIME_SHIFT,
+    FleetConfig,
+    FleetSim,
+    MachineClass,
+    poisson_workload,
+    vector,
+)
 
 from .common import save_json
 
@@ -53,6 +68,15 @@ SHARED_POLICIES = (
     SingleForkPolicy(0.05, 1, True),
     SingleForkPolicy(0.9, 2, False),
 )
+
+
+# regime-change scenario for the adaptive-vs-fixed frontier (shared with
+# examples/fleet_adaptive.py and the controller tests): calm + heavy tail
+# (replication nearly free and vital), then 4.4x the arrivals with bounded
+# task times (replication only burns slots).  The best fixed policy of
+# regime A drives rho past 1 in regime B.
+ADAPT_N_JOBS = 500
+ADAPT = REGIME_SHIFT
 
 
 # c>1 sweep: 3 gang blocks triple the service capacity, so the λ grid
@@ -272,6 +296,55 @@ def run():
         )
     rows.append(("fleet_agreement", 0.0, f"sojourn_dev={dev:.2f}sigma;cost_dev={cost_dev:.4f}"))
 
+    # -- adaptive vs fixed under a regime change ---------------------------
+    jobs = ADAPT.workload(ADAPT_N_JOBS)
+    pre_jobs = jobs[: ADAPT.shift_index(ADAPT_N_JOBS)]
+    fixed_rows, best_fixed, best_pre = [], None, float("inf")
+    for pol in ADAPT.fixed_grid:
+        pre = FleetSim(
+            FleetConfig(capacity=ADAPT.capacity, policy=pol, seed=ADAPT.seed)
+        ).run(pre_jobs)
+        full = FleetSim(
+            FleetConfig(capacity=ADAPT.capacity, policy=pol, seed=ADAPT.seed)
+        ).run(jobs)
+        fixed_rows.append(
+            dict(
+                policy=pol.label(),
+                pre_shift_sojourn=pre.stats.mean_sojourn,
+                full_sojourn=full.stats.mean_sojourn,
+                full_p99=full.stats.p99_sojourn,
+                full_cost=full.stats.mean_cost,
+            )
+        )
+        if pre.stats.mean_sojourn < best_pre:
+            best_fixed, best_pre = fixed_rows[-1], pre.stats.mean_sojourn
+    t0 = time.perf_counter()
+    adaptive_rep = FleetSim(
+        FleetConfig(capacity=ADAPT.capacity, adapt=True, seed=ADAPT.seed)
+    ).run(jobs)
+    adaptive_s = time.perf_counter() - t0
+    ctrl = adaptive_rep.controller
+    adaptive_sojourn = adaptive_rep.stats.mean_sojourn
+    if not ctrl.history:
+        failures.append("adaptive controller never re-optimized")
+    if ctrl.n_drifts < 1:
+        failures.append("KS drift test never fired across the regime change")
+    if adaptive_sojourn >= best_fixed["full_sojourn"]:
+        failures.append(
+            f"adaptive mean sojourn {adaptive_sojourn:.2f}s does not beat the "
+            f"best pre-shift fixed policy {best_fixed['policy']} "
+            f"({best_fixed['full_sojourn']:.2f}s on the full workload)"
+        )
+    rows.append(
+        (
+            "fleet_adaptive_regime_shift",
+            adaptive_s * 1e6 / ADAPT_N_JOBS,
+            f"adaptive={adaptive_sojourn:.2f}s;best_fixed[{best_fixed['policy']}]="
+            f"{best_fixed['full_sojourn']:.2f}s;reopts={len(ctrl.history)};"
+            f"drifts={ctrl.n_drifts}",
+        )
+    )
+
     # -- fleet-only story: replication load collapse under shared capacity -
     shared_rows = _event_sweep(
         capacity=3 * N_TASKS, policies=SHARED_POLICIES, lams=SHARED_LAMS, seed0=100
@@ -320,6 +393,26 @@ def run():
                     deviation_sigma=dev3,
                     cost_deviation=cost_dev3,
                 ),
+            ),
+            adaptive=dict(
+                n_jobs=ADAPT_N_JOBS,
+                lam=[ADAPT.lam_a, ADAPT.lam_b],
+                capacity=ADAPT.capacity,
+                fixed=fixed_rows,
+                best_pre_shift_fixed=best_fixed["policy"],
+                adaptive_sojourn=adaptive_sojourn,
+                adaptive_p99=adaptive_rep.stats.p99_sojourn,
+                reoptimizations=len(ctrl.history),
+                drift_events=ctrl.n_drifts,
+                decisions=[
+                    dict(
+                        trigger=d.trigger,
+                        policy=d.policy.label(),
+                        lam_hat=d.lam_hat,
+                        rho=d.rho,
+                    )
+                    for d in ctrl.history
+                ],
             ),
             heterogeneity=dict(
                 lam=HET_LAM,

@@ -1,0 +1,94 @@
+"""Closed-loop fleet control: the controller re-converges across a regime
+change that collapses any fixed policy tuned before it.
+
+    PYTHONPATH=src python examples/fleet_adaptive.py [--quick]
+
+Act 1 (calm): jobs arrive slowly (λ_A) with heavy-tailed Pareto task times.
+Replication is almost free here — the fleet is mostly idle — and it slashes
+the straggler tail, so the controller converges to an aggressive fork.
+
+Act 2 (rush hour): λ jumps ~4× and task times become bounded (Uniform):
+stragglers barely exist, but every replica now competes with admissions.
+The act-1 policy inflates E[C], pushes offered load ρ = λ·n·E[C]/capacity
+past 1, and the queue diverges — the exact failure `examples/fleet_sim.py`
+shows for "naive full replication".
+
+`FleetPolicyController` closes the loop: a KS drift test flushes the stale
+service samples, the online λ̂ tracks the new arrival rate, and the policy
+search re-scores every candidate (p, r, keep|kill) through the vectorized
+Kiefer–Wolfowitz queue at the *estimated* load — so it backs replication
+off to ~baseline on its own, while the single-job view (which never sees
+ρ) would keep forking.
+"""
+
+import sys
+import time
+
+from repro.fleet import REGIME_SHIFT, FleetConfig, FleetSim
+
+QUICK = "--quick" in sys.argv
+SCEN = REGIME_SHIFT  # shared with bench_fleet's gated frontier
+N_JOBS = 240 if QUICK else 500
+LAM_A, LAM_B = SCEN.lam_a, SCEN.lam_b
+SEED = SCEN.seed
+CAPACITY = SCEN.capacity
+
+jobs = SCEN.workload(N_JOBS)
+shift_idx = SCEN.shift_index(N_JOBS)
+print(
+    f"{N_JOBS} jobs x {SCEN.n_tasks} tasks on {CAPACITY} slots; regime shift "
+    f"at job {shift_idx}: lambda {LAM_A}->{LAM_B}/s, Pareto(1.5) -> Uniform(1.5, 2.5)\n"
+)
+
+# -- the operator's view before the shift: tune a fixed policy on regime A --
+grid = SCEN.fixed_grid
+pre_jobs = jobs[:shift_idx]
+print(f"{'fixed policy (tuned on regime A)':32s} {'A-only E[sojourn]':>18s} {'full-run E[sojourn]':>20s}")
+best_fixed, best_pre = None, float("inf")
+full_sojourn = {}
+for pol in grid:
+    pre = FleetSim(FleetConfig(capacity=CAPACITY, policy=pol, seed=SEED)).run(pre_jobs)
+    full = FleetSim(FleetConfig(capacity=CAPACITY, policy=pol, seed=SEED)).run(jobs)
+    full_sojourn[pol] = full.stats.mean_sojourn
+    print(f"{pol.label():32s} {pre.stats.mean_sojourn:18.2f} {full.stats.mean_sojourn:20.2f}")
+    if pre.stats.mean_sojourn < best_pre:
+        best_fixed, best_pre = pol, pre.stats.mean_sojourn
+
+print(f"\nbest pre-shift fixed policy: {best_fixed.label()}")
+
+# -- the adaptive run ------------------------------------------------------
+t0 = time.time()
+sim = FleetSim(FleetConfig(capacity=CAPACITY, adapt=True, seed=SEED))
+rep = sim.run(jobs)
+ctrl = rep.controller
+print(
+    f"adaptive controller:             full-run E[sojourn] = "
+    f"{rep.stats.mean_sojourn:.2f}  ({time.time() - t0:.0f}s, "
+    f"{len(ctrl.history)} re-optimizations, {ctrl.n_drifts} drift events)\n"
+)
+
+print("controller decision timeline (one row per re-optimization):")
+for d in ctrl.history:
+    flag = " <- drift" if d.trigger == "drift" else ""
+    print(
+        f"  lam_hat={d.lam_hat:5.2f}  rho_hat={d.rho:4.2f}  "
+        f"-> {d.policy.label():24s}{flag}"
+    )
+
+pre_picks = {d.policy.label() for d in ctrl.history if d.lam_hat < 2 * LAM_A}
+post_picks = {d.policy.label() for d in ctrl.history if d.lam_hat > 0.7 * LAM_B}
+print(f"\nconverged on regime A: {sorted(pre_picks)}")
+print(f"re-converged on regime B: {sorted(post_picks)}")
+
+assert ctrl.n_drifts >= 1, "the KS drift test should fire at the regime change"
+assert rep.stats.mean_sojourn < full_sojourn[best_fixed], (
+    "the adaptive controller should beat the best pre-shift fixed policy "
+    "across the regime change"
+)
+ratio = full_sojourn[best_fixed] / rep.stats.mean_sojourn
+print(
+    f"\nadaptive beats the best pre-shift fixed policy {ratio:.1f}x on mean "
+    f"sojourn: the act-1 winner ({best_fixed.label()}) drives rho past 1 in "
+    f"act 2,\nwhile the controller's KW search at lam_hat backs replication "
+    f"off before the queue diverges."
+)

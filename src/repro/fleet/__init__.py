@@ -14,9 +14,19 @@ from .workload import (  # noqa: F401
     Job,
     MachineClass,
     bursty_workload,
+    diurnal_workload,
+    piecewise_poisson_workload,
     poisson_workload,
+    regime_shift_workload,
     trace_workload,
 )
+from .adaptive import (  # noqa: F401
+    FleetPolicyController,
+    PolicyDecision,
+    as_policy_provider,
+    ks_statistic,
+)
+from .scenarios import REGIME_SHIFT, RegimeShiftScenario  # noqa: F401
 from .scheduler import FleetScheduler, JobRecord  # noqa: F401
 from .metrics import FleetStats, compute_stats  # noqa: F401
 from .fleet import FleetConfig, FleetReport, FleetSim, run_fleet  # noqa: F401

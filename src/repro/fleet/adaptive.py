@@ -1,0 +1,401 @@
+"""Load-aware closed-loop fleet policy control (DESIGN.md §10).
+
+The paper's Algorithm 1 + §4.3 pick (p, r, keep|kill) from the single-job
+(E[T], E[C]) — `core.adaptive.OnlinePolicyController` learns exactly that.
+Under queueing it is load-blind: replication inflates per-job cost E[C],
+hence the offered load ρ = λ·n·E[C]/capacity, and a policy that wins for
+one job can push ρ past 1 and collapse the whole fleet (the failure
+`examples/fleet_sim.py` demonstrates).  The right replication level is
+load-dependent (Aktaş et al., "Which Clones Should Attack and When?";
+"Straggler Mitigation by Delayed Relaunch of Tasks").
+
+`FleetPolicyController` closes the loop at the fleet level:
+
+  * task-completion telemetry streams into a bounded reservoir (uniform
+    over the stream) plus a sliding recent window; job arrivals feed an
+    online arrival-rate estimate λ̂;
+  * every `reoptimize_every` jobs the controller re-optimizes by scoring a
+    whole (p, r, keep|kill) candidate grid through
+    `fleet.vector.policy_search` — bootstrap-resampled (T, C) pushed
+    through the Kiefer–Wolfowitz G/G/c queue at λ̂ and the fleet's class
+    mix, the entire grid one fused device program — so the decision
+    variable is *fleet sojourn under estimated load*, not single-job
+    latency;
+  * candidates whose estimated ρ ≥ `rho_max` are vetoed whenever a stable
+    alternative exists (the stability guard the single-job controller
+    lacks);
+  * nonstationarity: a two-sample Kolmogorov–Smirnov test of the recent
+    window against the reservoir; on drift the reservoir is flushed to the
+    recent window and re-optimization fires immediately (with a cooldown so
+    one shift does not thrash);
+  * bounded ε-greedy exploration over r — allowed from BASELINE too, so
+    the controller is never stuck at p = 0;
+  * heterogeneous fleets get per-class policies: each machine class is
+    re-searched at its share of λ̂ with its own speed and block count, and
+    `policy_for(job, machine_class=...)` serves the class-specific pick.
+
+The controller implements the scheduler's policy-provider hook
+(`fleet.scheduler.FleetScheduler`); `as_policy_provider` adapts the legacy
+single-job controller to the same interface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.adaptive import OnlinePolicyController
+from repro.core.policy import BASELINE, SingleForkPolicy
+
+from . import vector
+from .workload import MachineClass
+
+__all__ = [
+    "FleetPolicyController",
+    "PolicyDecision",
+    "as_policy_provider",
+    "ks_statistic",
+]
+
+
+def ks_statistic(a, b) -> float:
+    """Two-sample Kolmogorov–Smirnov statistic sup_x |F̂_a(x) - F̂_b(x)|."""
+    a = np.sort(np.asarray(a, dtype=np.float64))
+    b = np.sort(np.asarray(b, dtype=np.float64))
+    if a.size == 0 or b.size == 0:
+        raise ValueError("need non-empty samples")
+    grid = np.concatenate([a, b])
+    cdf_a = np.searchsorted(a, grid, side="right") / a.size
+    cdf_b = np.searchsorted(b, grid, side="right") / b.size
+    return float(np.max(np.abs(cdf_a - cdf_b)))
+
+
+@dataclasses.dataclass
+class PolicyDecision:
+    """One re-optimization outcome (the controller's audit trail)."""
+
+    policy: SingleForkPolicy
+    trigger: str  # "periodic" | "drift"
+    lam_hat: float
+    rho: float  # estimated offered load of the chosen policy
+    mean_sojourn: float  # its predicted fleet sojourn at lam_hat
+    n_samples: int
+    explored: bool = False  # ε-greedy perturbation applied on top
+    class_policies: Optional[dict] = None
+
+
+@dataclasses.dataclass
+class FleetPolicyController:
+    """Closed-loop (p, r, keep|kill) selection under queueing.
+
+    Drop-in for `FleetConfig(adapt=True)`: the scheduler feeds arrivals and
+    task telemetry, asks `policy_for` at each admission, and the controller
+    periodically re-plans through the vectorized KW fast path.
+    """
+
+    objective: str = "latency"  # min E[sojourn] | "cost": + lam_cost·n·E[C]
+    lam_cost: float = 0.1  # λ of eq. 20, applied to the *sojourn* analogue
+    r_max: int = 3
+    p_grid: tuple = (0.05, 0.1, 0.2, 0.3)
+    window: int = 2048  # reservoir size
+    recent_window: int = 256  # sliding window for the drift test
+    min_samples: int = 64
+    reoptimize_every: int = 20  # jobs between periodic re-optimizations
+    epsilon: float = 0.05  # ε-greedy exploration probability
+    explore_p: float = 0.05  # fork fraction when exploring from baseline
+    drift_threshold: float = 1.63  # KS c(α)·√((m+n)/mn); 1.63 ≈ α = 0.01
+    drift_cooldown: int = 16  # min jobs between drift-triggered re-opts
+    arrival_window: int = 48  # arrivals kept for the λ̂ estimate
+    rho_max: float = 0.95  # stability guard: veto ρ̂ >= rho_max
+    search_jobs: int = 192  # rollout horizon per candidate
+    search_trials: int = 8  # independent fleets per candidate
+    seed: int = 0
+    # fleet geometry — usually bound by the scheduler, not the caller
+    n_tasks: Optional[int] = None
+    capacity: Optional[int] = None
+    classes: Optional[Sequence[MachineClass]] = None
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._samples: list[float] = []
+        self._seen = 0
+        self._recent: deque = deque(maxlen=self.recent_window)
+        self._arrivals: deque = deque(maxlen=self.arrival_window)
+        self._class_jobs: deque = deque(maxlen=256)
+        self._job_sizes: deque = deque(maxlen=64)
+        self._jobs = 0
+        self._last_drift_job = -(10**9)
+        self._policy: Optional[SingleForkPolicy] = None
+        self._class_policies: dict = {}
+        self.history: list[PolicyDecision] = []
+        self.n_drifts = 0
+        self.rho_hat: Optional[float] = None
+
+    # -------------------------------------------------- provider interface
+    def bind_fleet(self, classes: Sequence[MachineClass]) -> None:
+        """Scheduler hands over the pool geometry at construction."""
+        self.classes = tuple(classes)
+        self.capacity = sum(k.slots for k in self.classes)
+
+    def observe_arrival(self, t: float) -> None:
+        self._arrivals.append(float(t))
+
+    def record_task_time(self, seconds: float, machine_class: Optional[str] = None) -> None:
+        """Reservoir-sample one completed task's base execution time."""
+        x = float(seconds)
+        self._seen += 1
+        self._recent.append(x)
+        if len(self._samples) < self.window:
+            self._samples.append(x)
+        else:
+            j = int(self._rng.integers(0, self._seen))
+            if j < self.window:
+                self._samples[j] = x
+
+    def record_job_complete(
+        self, n_tasks: Optional[int] = None, machine_class: Optional[str] = None
+    ) -> None:
+        if n_tasks is not None:
+            self._job_sizes.append(int(n_tasks))
+        if machine_class is not None:
+            self._class_jobs.append(machine_class)
+        self._jobs += 1
+        if self._drift_detected():
+            # regime shift: the pre-shift mass in the reservoir is no longer
+            # evidence — restart it from the recent window and re-plan now
+            self._samples = list(self._recent)
+            self._seen = len(self._samples)
+            self.n_drifts += 1
+            self._last_drift_job = self._jobs
+            self._reoptimize("drift")
+        elif (
+            self._jobs % self.reoptimize_every == 0
+            and len(self._samples) >= self.min_samples
+        ):
+            self._reoptimize("periodic")
+
+    def policy_for(
+        self, job=None, machine_class: Optional[str] = None
+    ) -> Optional[SingleForkPolicy]:
+        """The scheduler's admission-time hook; None = no recommendation yet
+        (the scheduler then serves its configured default)."""
+        if machine_class is not None and machine_class in self._class_policies:
+            return self._class_policies[machine_class]
+        return self._policy
+
+    # ------------------------------------------------- compat / inspection
+    def current_policy(self) -> SingleForkPolicy:
+        return self._policy if self._policy is not None else BASELINE
+
+    @property
+    def n_samples(self) -> int:
+        return len(self._samples)
+
+    @property
+    def job_n(self) -> Optional[int]:
+        """The n the search plans for: the constructor pin, else the modal
+        recent job size (NOT the last-completed job's — on mixed-size
+        workloads that would retune the whole search to whichever job
+        happened to finish most recently)."""
+        if self.n_tasks is not None:
+            return self.n_tasks
+        if not self._job_sizes:
+            return None
+        sizes, counts = np.unique(np.asarray(self._job_sizes), return_counts=True)
+        return int(sizes[np.argmax(counts)])
+
+    def lam_estimate(self) -> Optional[float]:
+        """Arrival rate over the sliding arrival window (None = too early)."""
+        if len(self._arrivals) >= 2:
+            span = self._arrivals[-1] - self._arrivals[0]
+            if span > 0:
+                return (len(self._arrivals) - 1) / span
+        return None
+
+    # ----------------------------------------------------------- internals
+    def _drift_detected(self) -> bool:
+        m = len(self._recent)
+        if m < self.recent_window or len(self._samples) < self.min_samples:
+            return False
+        if self._jobs - self._last_drift_job < self.drift_cooldown:
+            return False
+        n = len(self._samples)
+        d = ks_statistic(self._recent, self._samples)
+        return d > self.drift_threshold * np.sqrt((m + n) / (m * n))
+
+    def _candidates(self) -> list[SingleForkPolicy]:
+        cands = [BASELINE]
+        for p in self.p_grid:
+            for keep in (True, False):
+                # π_keep(p, 0) is baseline in disguise; π_kill(p, 0) is a
+                # genuine relaunch policy, so kill starts at r = 0
+                for r in range(1 if keep else 0, self.r_max + 1):
+                    cands.append(SingleForkPolicy(float(p), r, keep))
+        return cands
+
+    def _search_geometry(self, n: int):
+        """(c, classes) for the KW model: whole gang blocks per class,
+        rounded DOWN — modeling more capacity than exists would loosen the
+        very ρ guard this controller adds, so leftover slots are dropped.
+        Classes too small for one gang block are excluded; if none fits
+        (pooled placement spanning classes), the pool is modeled as
+        homogeneous blocks of the total, again rounding down."""
+        if self.classes is None:
+            return max(1, (self.capacity or n) // n), None
+        eff = [
+            MachineClass(k.name, (k.slots // n) * n, k.speed)
+            for k in self.classes
+            if k.slots >= n
+        ]
+        if not eff:
+            return max(1, sum(k.slots for k in self.classes) // n), None
+        return None, tuple(eff)
+
+    def _objective(self, row: dict, n: int) -> float:
+        if self.objective == "cost":
+            return row["mean_sojourn"] + self.lam_cost * n * row["mean_cost"]
+        return row["mean_sojourn"]
+
+    def _choose(self, rows: list[dict], n: int) -> dict:
+        """Best candidate by objective among the stable ones; if nothing is
+        stable at λ̂ (an overloaded fleet), least-overloaded wins."""
+        stable = [r for r in rows if r["rho"] < self.rho_max]
+        if stable:
+            return min(stable, key=lambda r: self._objective(r, n))
+        return min(rows, key=lambda r: r["rho"])
+
+    def _class_shares(self) -> dict:
+        """Completed-job share per class name (slot-proportional fallback)."""
+        total = sum(k.slots for k in self.classes)
+        shares = {k.name: k.slots / total for k in self.classes}
+        known = [c for c in self._class_jobs if c in shares]
+        if len(known) >= 16:
+            shares = {name: 0.0 for name in shares}
+            for c in known:
+                shares[c] += 1.0 / len(known)
+        return shares
+
+    def _search_key(self):
+        import jax
+
+        return jax.random.PRNGKey(int(self._rng.integers(2**31)))
+
+    def _reoptimize(self, trigger: str) -> None:
+        lam_hat = self.lam_estimate()
+        n = self.job_n
+        if n is None or lam_hat is None or len(self._samples) < 2:
+            return  # not enough signal to be load-aware yet
+        samples = np.asarray(self._samples, dtype=np.float64)
+        if len(samples) != self.window:
+            # fixed-length bootstrap resample: the search resamples anyway,
+            # and a constant shape means ONE compilation of the fused grid
+            # across reservoir growth and drift flushes
+            samples = self._rng.choice(samples, size=self.window, replace=True)
+        cands = self._candidates()
+        c, classes = self._search_geometry(n)
+        rows = vector.policy_search(
+            samples, cands, lam_hat, n,
+            n_jobs=self.search_jobs, m_trials=self.search_trials,
+            key=self._search_key(), c=c, classes=classes,
+        )
+        pick = self._choose(rows, n)
+        pol = pick["policy"]
+        explored = False
+        if self._rng.random() < self.epsilon:
+            if pol.is_baseline:
+                probe = SingleForkPolicy(p=self.explore_p, r=1, keep=True)
+            else:
+                dr = int(self._rng.choice((-1, 1)))
+                r = int(np.clip(pol.r + dr, 0, self.r_max))
+                probe = (
+                    None
+                    if (pol.keep and r == 0) or r == pol.r
+                    else SingleForkPolicy(p=pol.p, r=r, keep=pol.keep)
+                )
+            # exploration must respect the same stability guard as the
+            # pick: never probe a policy the search just scored unstable
+            probe_row = next(
+                (row for row in rows if probe is not None and row["policy"] == probe),
+                None,
+            )
+            if probe_row is not None and probe_row["rho"] < self.rho_max:
+                pick, pol = probe_row, probe  # the decision records what runs
+                explored = True
+        # per-class policies: each class re-searched at its λ̂ share with its
+        # own speed/blocks (a slow pool saturates at a lower replication
+        # level than a fast one)
+        class_picks = None
+        if classes is not None and len(classes) > 1:
+            shares = self._class_shares()
+            class_picks = {}
+            for k in classes:
+                lam_k = lam_hat * shares.get(k.name, 0.0)
+                if lam_k <= 0:
+                    continue
+                rows_k = vector.policy_search(
+                    samples, cands, lam_k, n,
+                    n_jobs=self.search_jobs, m_trials=self.search_trials,
+                    key=self._search_key(), classes=(k,),
+                )
+                class_picks[k.name] = self._choose(rows_k, n)["policy"]
+            self._class_policies = dict(class_picks)
+        self._policy = pol
+        self.rho_hat = pick["rho"]
+        self.history.append(
+            PolicyDecision(
+                policy=pol,
+                trigger=trigger,
+                lam_hat=float(lam_hat),
+                rho=float(pick["rho"]),
+                mean_sojourn=float(pick["mean_sojourn"]),
+                n_samples=len(self._samples),
+                explored=explored,
+                class_policies=class_picks,
+            )
+        )
+
+
+# --------------------------------------------------------------------------
+# provider adaptation for the legacy single-job controller
+# --------------------------------------------------------------------------
+
+
+class _LegacyProvider:
+    """`OnlinePolicyController` behind the scheduler's provider hook.
+
+    Preserves the pre-hook semantics exactly: telemetry forwarded, no
+    arrival tracking, and the learned policy only overrides the scheduler
+    default once it is a *replicating* one (baseline means "not learned
+    yet" for the single-job controller, which starts at BASELINE)."""
+
+    def __init__(self, inner: OnlinePolicyController):
+        self.inner = inner
+
+    def bind_fleet(self, classes) -> None:
+        pass
+
+    def observe_arrival(self, t: float) -> None:
+        pass
+
+    def policy_for(self, job=None, machine_class=None):
+        learned = self.inner.current_policy()
+        return None if learned.is_baseline else learned
+
+    def record_task_time(self, seconds, machine_class=None) -> None:
+        self.inner.record_task_time(seconds)
+
+    def record_job_complete(self, n_tasks=None, machine_class=None) -> None:
+        self.inner.record_job_complete(n_tasks=n_tasks)
+
+
+def as_policy_provider(controller):
+    """Normalize a controller to the scheduler's policy-provider interface
+    (anything already exposing `policy_for` passes through untouched)."""
+    if controller is None:
+        return None
+    if hasattr(controller, "policy_for"):
+        return controller
+    return _LegacyProvider(controller)

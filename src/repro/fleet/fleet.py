@@ -8,9 +8,14 @@
                                   policy=SingleForkPolicy(0.1, 1))).run(jobs)
     print(report.stats.row())
 
-`FleetConfig.adapt=True` swaps the fixed policy for an online controller
-(paper §5.2): jobs without a pinned policy use whatever Algorithm 1 + §4.3
-currently recommend from the fleet's own completed-task telemetry.
+`FleetConfig.adapt=True` swaps the fixed policy for a closed-loop
+controller.  The default (`adapt_mode="fleet"`) is the load-aware
+`fleet.adaptive.FleetPolicyController`: it estimates the arrival rate and
+service distribution from the fleet's own telemetry and re-plans
+(p, r, keep|kill) through the vectorized Kiefer–Wolfowitz policy search,
+so replication backs off before it pushes the offered load past ρ = 1.
+`adapt_mode="online"` keeps the legacy single-job controller (paper §5.2),
+which optimizes per-job (E[T], E[C]) and is blind to queueing.
 """
 
 from __future__ import annotations
@@ -21,6 +26,7 @@ from typing import Optional, Sequence
 from repro.core.adaptive import OnlinePolicyController
 from repro.core.policy import BASELINE, SingleForkPolicy
 
+from .adaptive import FleetPolicyController
 from .metrics import FleetStats, compute_stats
 from .scheduler import FleetScheduler, JobRecord
 from .workload import Job, MachineClass
@@ -37,6 +43,7 @@ class FleetConfig:
     preempt_replicas: bool = False  # cancel speculation to admit queued work
     fork_overhead: float = 0.0  # per-replica launch latency
     adapt: bool = False  # learn the policy online
+    adapt_mode: str = "fleet"  # "fleet" (load-aware) or "online" (single-job §5.2)
     objective: str = "latency"  # controller objective when adapt=True
     seed: int = 0
     # heterogeneous pools: class specs + copy placement ("pooled" packs
@@ -53,21 +60,28 @@ class FleetReport:
     capacity: int
     max_busy: int  # peak concurrently-busy slots (conservation witness)
     busy_time: float
-    controller: Optional[OnlinePolicyController] = None
+    # FleetPolicyController or OnlinePolicyController, per adapt_mode
+    controller: Optional[object] = None
 
     @property
     def final_policy(self) -> Optional[str]:
         return self.controller.current_policy().label() if self.controller else None
 
 
+def _build_controller(config: "FleetConfig"):
+    if not config.adapt:
+        return None
+    if config.adapt_mode == "fleet":
+        return FleetPolicyController(objective=config.objective, seed=config.seed)
+    if config.adapt_mode == "online":
+        return OnlinePolicyController(objective=config.objective, seed=config.seed)
+    raise ValueError(f"unknown adapt_mode {config.adapt_mode!r}")
+
+
 class FleetSim:
     def __init__(self, config: FleetConfig):
         self.config = config
-        self.controller = (
-            OnlinePolicyController(objective=config.objective, seed=config.seed)
-            if config.adapt
-            else None
-        )
+        self.controller = _build_controller(config)
 
     def run(self, jobs: Sequence[Job]) -> FleetReport:
         cfg = self.config

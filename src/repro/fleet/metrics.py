@@ -51,12 +51,18 @@ class FleetStats:
         )
 
 
-def _batch_means_se(x: np.ndarray, n_batches: int = 20) -> float:
+def _batch_means_se(x: np.ndarray, n_batches: int = 20, min_batch: int = 8) -> float:
     """Std error of the mean via batch means: consecutive sojourns share
     queue backlog, so the i.i.d. std/sqrt(n) formula understates the error
     badly near saturation.  Contiguous batches keep the within-batch
-    autocorrelation; their means are approximately independent."""
-    nb = min(n_batches, len(x))
+    autocorrelation; their means are approximately independent — but only
+    if each batch actually spans several sojourns: with fewer records than
+    `n_batches` the split degenerates to singletons, i.e. exactly the
+    i.i.d. estimate this method exists to avoid.  So batches are at least
+    `min_batch` long (using fewer batches when records are scarce), and
+    with too few records for even 2 such batches the SE is reported as 0.0
+    (unknown) rather than as a confidently-wrong singleton estimate."""
+    nb = min(n_batches, len(x) // min_batch)
     if nb < 2:
         return 0.0
     means = np.array([b.mean() for b in np.array_split(x, nb)])
@@ -84,10 +90,15 @@ def compute_stats(
             k.name: float(b / (k.slots * max(makespan, 1e-12)))
             for k, b in zip(classes, busy_by_class)
         }
-        class_share = {
-            k.name: sum(1 for r in records if r.machine_class == k.name) / len(records)
-            for k in classes
-        }
+        # every job is attributed exactly once: to its class, or — pooled
+        # placement where a job's copies spanned classes — to "mixed".
+        # Shares therefore always sum to 1 (tests/test_fleet.py asserts it).
+        counts: dict = {}
+        for r in records:
+            counts[r.machine_class] = counts.get(r.machine_class, 0) + 1
+        class_share = {k.name: counts.pop(k.name, 0) / len(records) for k in classes}
+        for name, cnt in sorted(counts.items()):
+            class_share[name] = cnt / len(records)
     return FleetStats(
         n_jobs=len(records),
         mean_sojourn=float(soj.mean()),

@@ -1,0 +1,62 @@
+"""Canonical nonstationary fleet scenarios (DESIGN.md §10).
+
+One definition shared by the gated benchmark (`benchmarks/bench_fleet.py`),
+the CI smoke demo (`examples/fleet_adaptive.py`) and the controller tests,
+so what CI asserts and what the artifact records never silently diverge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.distributions import Distribution, Pareto, Uniform
+from repro.core.policy import BASELINE, SingleForkPolicy
+
+from .workload import Job, regime_shift_workload
+
+__all__ = ["REGIME_SHIFT", "RegimeShiftScenario"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RegimeShiftScenario:
+    """Calm + heavy tail, then rush hour + bounded tail.
+
+    Act 1: arrivals at `lam_a` with Pareto task times — the fleet is mostly
+    idle and replication slashes the straggler tail almost for free, so the
+    regime-A optimum is an aggressive fork.  Act 2: `lam_b` (~4×) with
+    bounded Uniform task times — stragglers barely exist and every replica
+    competes with admissions, so the act-1 winner inflates E[C], drives
+    ρ = λ·n·E[C]/capacity past 1, and collapses the queue.  Any fixed
+    policy tuned on act 1 meets act 2 head-on; the load-aware controller
+    must detect the drift and back replication off.
+    """
+
+    n_tasks: int = 16
+    capacity: int = 48  # 3 gang blocks
+    lam_a: float = 0.25
+    lam_b: float = 1.1
+    dist_a: Distribution = Pareto(1.5, 0.6)  # heavy tail, mean 1.8
+    dist_b: Distribution = Uniform(1.5, 2.5)  # bounded, mean 2.0
+    shift_frac: float = 0.5
+    seed: int = 7
+    # the fixed-policy grid an operator would sweep when tuning on act 1
+    fixed_grid: tuple = (
+        BASELINE,
+        SingleForkPolicy(0.05, 1, True),
+        SingleForkPolicy(0.1, 1, True),
+        SingleForkPolicy(0.2, 1, False),
+        SingleForkPolicy(0.3, 2, False),
+        SingleForkPolicy(0.5, 2, False),
+    )
+
+    def workload(self, n_jobs: int) -> list[Job]:
+        return regime_shift_workload(
+            n_jobs, self.lam_a, self.lam_b, self.n_tasks,
+            self.dist_a, self.dist_b, shift_frac=self.shift_frac, seed=self.seed,
+        )
+
+    def shift_index(self, n_jobs: int) -> int:
+        return int(self.shift_frac * n_jobs)
+
+
+REGIME_SHIFT = RegimeShiftScenario()

@@ -41,8 +41,12 @@ modes:
     agreement tests run it: the fast path's oracle has the same semantics,
     not merely similar statistics.
 
-An optional `OnlinePolicyController` supplies the policy for jobs that
-don't pin one, learning F̂_X from completed-task telemetry across jobs.
+An optional policy provider supplies the policy for jobs that don't pin
+one.  The scheduler speaks the provider hook (`observe_arrival`,
+`policy_for(job, machine_class)`, `record_task_time`,
+`record_job_complete`): pass a `fleet.adaptive.FleetPolicyController` for
+load-aware closed-loop control, or a legacy `core.adaptive.
+OnlinePolicyController` (adapted automatically via `as_policy_provider`).
 """
 
 from __future__ import annotations
@@ -52,7 +56,6 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.adaptive import OnlinePolicyController
 from repro.core.policy import (
     BASELINE,
     MultiForkPolicy,
@@ -60,6 +63,7 @@ from repro.core.policy import (
     num_stragglers,
 )
 
+from .adaptive import as_policy_provider
 from .events import Event, EventHeap
 from .workload import Job, MachineClass
 
@@ -129,6 +133,7 @@ class _RunningJob:
         self.n_preempted = 0
         self.fork_pending = False
         self.home_class = 0  # reservation class (aligned) / first-copy class
+        self.classes_used: set = set()  # class indices any copy landed on
         self.n_live = 0  # live copies (bounds replicas in aligned mode)
 
     def stage_threshold(self) -> Optional[int]:
@@ -160,7 +165,7 @@ class FleetScheduler:
         relaunch_delay: float = 0.0,
         preempt_replicas: bool = False,
         fork_overhead: float = 0.0,
-        controller: Optional[OnlinePolicyController] = None,
+        controller=None,  # policy provider (see as_policy_provider)
         seed: int = 0,
         classes: Optional[Sequence[MachineClass]] = None,
         placement: str = "pooled",
@@ -172,6 +177,8 @@ class FleetScheduler:
         self.classes = tuple(classes)
         if len({k.name for k in self.classes}) != len(self.classes):
             raise ValueError("machine-class names must be unique")
+        if any(k.name == "mixed" for k in self.classes):
+            raise ValueError('"mixed" is reserved for jobs whose copies span classes')
         total = sum(k.slots for k in self.classes)
         if capacity is not None and capacity != total:
             raise ValueError(
@@ -201,7 +208,9 @@ class FleetScheduler:
         self.relaunch_delay = relaunch_delay
         self.preempt_replicas = preempt_replicas
         self.fork_overhead = fork_overhead
-        self.controller = controller
+        self.controller = as_policy_provider(controller)
+        if self.controller is not None and hasattr(self.controller, "bind_fleet"):
+            self.controller.bind_fleet(self.classes)
         # decorrelated from workload generators that may share `seed`
         self.rng = np.random.default_rng((0x5C4ED, seed))
         # run state
@@ -236,6 +245,8 @@ class FleetScheduler:
             assert ev.time >= self.now - 1e-9, "event time went backwards"
             self.now = ev.time
             if ev.kind == "arrive":
+                if self.controller is not None:
+                    self.controller.observe_arrival(self.now)
                 self.queue.append(ev.data)
                 self._try_admit()
             elif ev.kind == "copy_done":
@@ -333,10 +344,17 @@ class FleetScheduler:
         if policy is None:
             policy = self.default_policy
             if self.controller is not None:
-                # serve with the configured policy until the controller has
-                # actually learned a replicating one (mirrors HedgedServer)
-                learned = self.controller.current_policy()
-                if not learned.is_baseline:
+                # the provider hook: None = "no recommendation yet", so the
+                # configured default serves until the controller has learned
+                # one.  Aligned placement knows the serving class up front,
+                # letting a class-aware provider pick a per-class policy.
+                cls_hint = None
+                if self.placement == "aligned":
+                    cls = self._aligned_class(job)
+                    if cls is not None:
+                        cls_hint = self.classes[cls].name
+                learned = self.controller.policy_for(job, machine_class=cls_hint)
+                if learned is not None:
                     policy = learned
         stages = _normalize_stages(policy)
         n = job.n_tasks
@@ -383,6 +401,7 @@ class FleetScheduler:
         ev = self.heap.push(self.now + wall, "copy_done", (rjob.job.job_id, task_id))
         copy = _Copy(start=self.now, event=ev, fresh=fresh, cls=cls)
         rjob.tasks[task_id].copies.append(copy)
+        rjob.classes_used.add(cls)
         rjob.n_live += 1
         ev.data = (rjob.job.job_id, task_id, copy)
         if fresh:
@@ -421,8 +440,12 @@ class FleetScheduler:
         rjob.n_done += 1
         if self.controller is not None:
             # simulation knows the true original duration even when a
-            # replica won (same telemetry the single-job executor reports)
-            self.controller.record_task_time(float(rjob.durations[task_id]))
+            # replica won (same telemetry the single-job executor reports);
+            # tagged with the class that served the task's first copy
+            self.controller.record_task_time(
+                float(rjob.durations[task_id]),
+                machine_class=self.classes[task.copies[0].cls].name,
+            )
         self._maybe_schedule_fork(rjob)
         if rjob.n_done == rjob.job.n_tasks:
             self._finish_job(rjob)
@@ -476,6 +499,13 @@ class FleetScheduler:
         del self.running[job.job_id]
         if self.placement == "aligned":
             self.reserved[rjob.home_class] -= job.n_tasks
+        # pooled placement may scatter a job's copies across classes: such a
+        # job belongs to no single class and is attributed to "mixed" so
+        # per-class job shares still sum to 1 (metrics asserts this)
+        if len(rjob.classes_used) > 1:
+            cls_name = "mixed"
+        else:
+            cls_name = self.classes[rjob.home_class].name
         self.records.append(
             JobRecord(
                 job_id=job.job_id,
@@ -487,8 +517,10 @@ class FleetScheduler:
                 n_replicas=rjob.n_replicas,
                 n_preempted=rjob.n_preempted,
                 policy=getattr(rjob, "policy_label", "?"),
-                machine_class=self.classes[rjob.home_class].name,
+                machine_class=cls_name,
             )
         )
         if self.controller is not None:
-            self.controller.record_job_complete()
+            self.controller.record_job_complete(
+                n_tasks=job.n_tasks, machine_class=cls_name
+            )

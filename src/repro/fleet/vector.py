@@ -44,6 +44,7 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.distributions import Distribution
 from repro.core.policy import SingleForkPolicy, num_stragglers
@@ -56,6 +57,7 @@ __all__ = [
     "fleet_rollout",
     "kw_queue",
     "lindley",
+    "policy_search",
     "sweep",
     "trace_kill_rollout",
 ]
@@ -360,6 +362,159 @@ def sweep(
             )
             rows.append(dict(lam=float(lam), policy=policy.label(), **res.summary()))
     return rows
+
+
+# --------------------------------------------------------------------------
+# fused empirical policy search: the adaptive controller's inner loop
+# --------------------------------------------------------------------------
+
+
+def _emp_quantile(xs, u):
+    """Inverse-transform gather through the sorted empirical sample
+    (type-1 inverse, identical to `core.distributions.Empirical.quantile`)."""
+    m = xs.shape[0]
+    idx = jnp.clip(jnp.ceil(u * m).astype(jnp.int32) - 1, 0, m - 1)
+    return xs[idx]
+
+
+@partial(jax.jit, static_argnames=("n", "n_jobs", "m_trials", "r_max"))
+def _policy_search_jit(
+    key, xs, ks, rs, keeps, lam, n, n_jobs, m_trials, r_max, speeds, slot_class, class_slots
+):
+    """Evaluate EVERY candidate policy on one shared set of random draws.
+
+    (k, r, keep) are per-candidate *dynamic* vectors — the fork point enters
+    via masks instead of shapes, so the whole grid vmaps into a single
+    device program: one compile covers any reservoir content, any λ̂, and
+    any same-sized candidate set.  Sharing the bootstrap draws across
+    candidates is common-random-numbers variance reduction: the argmin over
+    candidates is far sharper than independent rollouts of equal size.
+    """
+    ka, kx, ky = jax.random.split(key, 3)
+    inter = jax.random.exponential(ka, (m_trials, n_jobs)) / lam
+    arrivals = jnp.cumsum(inter, axis=1)
+    u0 = jax.random.uniform(kx, (m_trials, n_jobs, n))
+    x_sorted = jnp.sort(_emp_quantile(xs, u0), axis=-1)
+    fresh = _emp_quantile(xs, jax.random.uniform(ky, (m_trials, n_jobs, n, r_max + 1)))
+    iota = jnp.arange(n)
+    r_iota = jnp.arange(r_max + 1)
+
+    def one(k, r, keep):
+        # masked single-fork semantics (Definitions 1-2, as in
+        # `single_fork_batch` but with a dynamic fork point k = n - s)
+        t1 = jnp.take(x_sorted, k - 1, axis=-1)  # (m_trials, n_jobs)
+        straggler = iota >= k  # (n,)
+        c1 = jnp.sum(jnp.where(straggler, 0.0, x_sorted), axis=-1) + (n - k) * t1
+        fresh_keep = jnp.min(jnp.where(r_iota < r, fresh, jnp.inf), axis=-1)
+        fresh_kill = jnp.min(jnp.where(r_iota < r + 1, fresh, jnp.inf), axis=-1)
+        remaining = x_sorted - t1[..., None]
+        y = jnp.where(keep, jnp.minimum(remaining, fresh_keep), fresh_kill)
+        y = jnp.where(straggler, y, 0.0)
+        T = t1 + jnp.max(y, axis=-1)
+        C = (c1 + (r + 1.0) * jnp.sum(y, axis=-1)) / n
+        soj, wait, svc, cost, util, _, _ = jax.vmap(
+            lambda a, t, c: _queue_stats_kw(a, t, c, speeds, slot_class, class_slots, n)
+        )(arrivals, T, C)
+        # two saturation measures, both in base work units over Σ slot speeds:
+        #   rho_work  = λ·n·E[C] / Σ slots·speed — copy-seconds offered vs
+        #               served (the work-conserving / pooled bound; the n's
+        #               cancel since each job slot carries n task slots);
+        #   rho_block = λ·E[T] / Σ block speeds — gang-block occupancy: in
+        #               the aligned/KW regime a job holds its whole block
+        #               for T, so the queue diverges when THIS reaches 1
+        #               even with idle task slots inside the block.
+        rho_work = lam * jnp.mean(C) / jnp.sum(speeds)
+        rho_block = lam * jnp.mean(T) / jnp.sum(speeds)
+        return jnp.stack(
+            [
+                jnp.mean(soj),
+                jnp.mean(wait),
+                jnp.mean(svc),
+                jnp.mean(cost),
+                jnp.mean(util),
+                jnp.percentile(soj, 99.0),
+                jnp.maximum(rho_work, rho_block),
+                rho_work,
+                rho_block,
+            ]
+        )
+
+    return jax.vmap(one)(ks, rs, keeps)
+
+
+_SEARCH_KEYS = (
+    "mean_sojourn",
+    "mean_wait",
+    "mean_service",
+    "mean_cost",
+    "utilization",
+    "p99",
+    "rho",
+    "rho_work",
+    "rho_block",
+)
+
+
+def policy_search(
+    samples,
+    candidates: Sequence[SingleForkPolicy],
+    lam: float,
+    n: int,
+    n_jobs: int = 192,
+    m_trials: int = 8,
+    key=None,
+    c: Optional[int] = None,
+    classes: Optional[Sequence[MachineClass]] = None,
+) -> list[dict]:
+    """Score candidate policies on an empirical trace at an estimated load.
+
+    This is the adaptive controller's inner loop: per-job (T, C) under each
+    π(p, r, keep|kill) are bootstrap-resampled from `samples` (Algorithm 1
+    semantics) and pushed through the Kiefer–Wolfowitz G/G/c queue at
+    arrival rate `lam` — so a policy is judged by its *fleet* sojourn under
+    queueing, not its single-job latency.  The entire candidate grid runs
+    as one fused device program (candidates vmapped over shared draws);
+    `samples`, `lam` and the slot arrays are traced, so repeated calls with
+    fresh telemetry reuse one compilation as long as the sample count and
+    candidate set are unchanged (the adaptive controller bootstrap-
+    resamples its reservoir to a fixed length for exactly this reason).
+
+    Returns one dict per candidate: the policy itself, its label, mean
+    sojourn/wait/service/cost, utilization, p99 sojourn, and saturation
+    estimates — `rho_work` (copy-seconds: λ·n·E[C] / Σ slots·speed),
+    `rho_block` (gang-block occupancy: λ·E[T] / Σ block speeds, the bound
+    that actually governs the aligned/KW queue), and `rho` = max of the
+    two; `rho >= 1` marks a policy this fleet cannot absorb at `lam`.
+    """
+    if lam <= 0:
+        raise ValueError("arrival rate lam must be > 0")
+    if not candidates:
+        raise ValueError("need at least one candidate policy")
+    samples = jnp.sort(jnp.asarray(samples, dtype=jnp.float32).ravel())
+    if samples.shape[0] < 2:
+        raise ValueError("need at least 2 samples to search policies")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    slot = _slot_arrays(n, c, classes)
+    if slot is None:  # c = 1 homogeneous: a single unit-speed job slot
+        speeds = jnp.ones((1,))
+        slot_class = jnp.zeros((1,), jnp.int32)
+        class_slots = jnp.array([float(n)])
+    else:
+        speeds, slot_class, class_slots, _ = slot
+    ks = jnp.array([n - num_stragglers(n, pol.p) for pol in candidates], jnp.int32)
+    rs = jnp.array([pol.r for pol in candidates], jnp.int32)
+    keeps = jnp.array([pol.keep for pol in candidates])
+    r_max = max(pol.r for pol in candidates)
+    stats = _policy_search_jit(
+        key, samples, ks, rs, keeps, float(lam), n, n_jobs, m_trials, r_max,
+        speeds, slot_class, class_slots,
+    )
+    stats = np.asarray(stats)
+    return [
+        dict(policy=pol, label=pol.label(), **dict(zip(_SEARCH_KEYS, map(float, row))))
+        for pol, row in zip(candidates, stats)
+    ]
 
 
 # --------------------------------------------------------------------------

@@ -13,6 +13,14 @@ literature cares about:
     `Empirical(trace)` from one of the trace jobs, so fleet sweeps run on
     the paper's own workload shapes.
 
+Nonstationary generators (the adaptive controller's proving ground):
+
+  * `piecewise_poisson_workload` — λ ramps at known job indices, optional
+    per-segment service distributions;
+  * `regime_shift_workload`     — one abrupt (λ, F_X) change;
+  * `diurnal_workload`          — sinusoidal λ(t) via Lewis–Shedler
+    thinning (smooth drift rather than a jump).
+
 Jobs with `policy=None` defer the replication decision to the scheduler
 (its default policy or the online controller); a per-job policy overrides.
 
@@ -39,6 +47,9 @@ __all__ = [
     "poisson_workload",
     "bursty_workload",
     "trace_workload",
+    "piecewise_poisson_workload",
+    "regime_shift_workload",
+    "diurnal_workload",
 ]
 
 Policy = Union[SingleForkPolicy, MultiForkPolicy]
@@ -139,6 +150,111 @@ def bursty_workload(
                 Job(job_id=len(jobs), arrival=t, n_tasks=n_tasks, dist=dist, policy=policy)
             )
         t += float(rng.exponential(gap_mean))
+    return jobs
+
+
+def piecewise_poisson_workload(
+    segments: Sequence[tuple],
+    n_tasks: int,
+    dist: Distribution,
+    seed: int = 0,
+    policy: Optional[Policy] = None,
+    dists: Optional[Sequence[Distribution]] = None,
+) -> list[Job]:
+    """Piecewise-constant λ: `segments` is a sequence of (rate, n_jobs)
+    pairs and the arrival clock carries across segment boundaries, so the
+    result is one sorted stream whose rate ramps at known job indices.
+
+    `dists` (optional, one per segment) additionally switches the service
+    distribution at each boundary — the regime-shift ingredient the
+    adaptive controller's drift test is built for; default: `dist` all the
+    way through.
+    """
+    if not segments:
+        raise ValueError("need at least one (rate, n_jobs) segment")
+    if dists is not None and len(dists) != len(segments):
+        raise ValueError("need one dist per segment")
+    rng = np.random.default_rng(seed)
+    jobs: list[Job] = []
+    t = 0.0
+    for si, (rate, n_jobs) in enumerate(segments):
+        if rate <= 0 or n_jobs < 0:
+            raise ValueError("segment rates must be > 0 and job counts >= 0")
+        seg_dist = dists[si] if dists is not None else dist
+        for _ in range(int(n_jobs)):
+            t += float(rng.exponential(1.0 / rate))
+            jobs.append(
+                Job(
+                    job_id=len(jobs),
+                    arrival=t,
+                    n_tasks=n_tasks,
+                    dist=seg_dist,
+                    policy=policy,
+                )
+            )
+    return jobs
+
+
+def regime_shift_workload(
+    n_jobs: int,
+    rate_before: float,
+    rate_after: float,
+    n_tasks: int,
+    dist_before: Distribution,
+    dist_after: Distribution,
+    shift_frac: float = 0.5,
+    seed: int = 0,
+    policy: Optional[Policy] = None,
+) -> list[Job]:
+    """One abrupt regime change: the first `shift_frac` of jobs arrive at
+    `rate_before` with service times ~ `dist_before`, the rest at
+    `rate_after` ~ `dist_after`.  The canonical adaptive-vs-fixed stressor:
+    a policy tuned to the first regime meets the second one head-on.
+    Shift job index = int(shift_frac * n_jobs)."""
+    if not 0.0 < shift_frac < 1.0:
+        raise ValueError("shift_frac must be in (0, 1)")
+    k = int(shift_frac * n_jobs)
+    return piecewise_poisson_workload(
+        [(rate_before, k), (rate_after, n_jobs - k)],
+        n_tasks,
+        dist_before,
+        seed=seed,
+        policy=policy,
+        dists=[dist_before, dist_after],
+    )
+
+
+def diurnal_workload(
+    n_jobs: int,
+    rate: float,
+    period: float,
+    n_tasks: int,
+    dist: Distribution,
+    amplitude: float = 0.8,
+    seed: int = 0,
+    policy: Optional[Policy] = None,
+) -> list[Job]:
+    """Sinusoidal λ(t) = rate·(1 + amplitude·sin(2πt/period)) via
+    Lewis–Shedler thinning: candidates from a homogeneous Poisson process
+    at the peak rate are accepted with probability λ(t)/λ_peak.  Long-run
+    mean rate is `rate`; the instantaneous rate swings by ±amplitude —
+    the smooth nonstationarity (vs the jump of `regime_shift_workload`)
+    that exercises the controller's periodic re-optimization rather than
+    its drift test."""
+    if rate <= 0 or period <= 0:
+        raise ValueError("rate and period must be > 0")
+    if not 0.0 <= amplitude < 1.0:
+        raise ValueError("amplitude must be in [0, 1)")
+    rng = np.random.default_rng(seed)
+    peak = rate * (1.0 + amplitude)
+    t, jobs = 0.0, []
+    while len(jobs) < n_jobs:
+        t += float(rng.exponential(1.0 / peak))
+        lam_t = rate * (1.0 + amplitude * np.sin(2.0 * np.pi * t / period))
+        if rng.random() < lam_t / peak:
+            jobs.append(
+                Job(job_id=len(jobs), arrival=t, n_tasks=n_tasks, dist=dist, policy=policy)
+            )
     return jobs
 
 

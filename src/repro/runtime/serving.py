@@ -59,7 +59,7 @@ class HedgedServer:
         report = self.executor.run(tasks, self._policy)
         for d in report.task_durations:
             self.controller.record_task_time(d)
-        self.controller.record_job_complete()
+        self.controller.record_job_complete(n_tasks=len(requests))
         if self.adapt and self.controller.current_policy().p > 0:
             self._policy = self.controller.current_policy()
         finishes = np.array([r.finish_time for r in report.results])
@@ -105,6 +105,7 @@ class FleetHedgedServer:
         serve_fn: Callable[[object], object] = None,
         policy: Optional[SingleForkPolicy] = None,
         adapt: bool = True,
+        adapt_mode: str = "fleet",
         preempt_replicas: Optional[bool] = None,
         seed: int = 0,
         classes=None,
@@ -115,7 +116,15 @@ class FleetHedgedServer:
         fast GPU pool plus a slow spot-instance pool) and a `placement`
         mode — "aligned" reserves a one-class gang block per batch, which
         is the regime the vectorized planner (`repro.fleet.vector`) models,
-        so capacity decisions simulated there transfer directly."""
+        so capacity decisions simulated there transfer directly.
+
+        With `adapt=True` the hedging policy is closed-loop:
+        `adapt_mode="fleet"` (default) uses the load-aware
+        `fleet.adaptive.FleetPolicyController`, which watches batch
+        arrivals and replica latencies and re-plans (p, r, keep|kill)
+        through the vectorized KW policy search so hedging backs off
+        before it saturates the replica pool; `adapt_mode="online"` keeps
+        the single-batch learner (paper §5.2)."""
         from repro.fleet import FleetConfig, FleetSim
 
         if capacity is None and classes is None:
@@ -136,11 +145,17 @@ class FleetHedgedServer:
                 policy=policy or SingleForkPolicy(p=0.05, r=1, keep=True),
                 preempt_replicas=preempt_replicas,
                 adapt=adapt,
+                adapt_mode=adapt_mode,
                 seed=seed,
                 classes=classes,
                 placement=placement,
             )
         )
+
+    @property
+    def controller(self):
+        """The policy controller learning across batches (None if fixed)."""
+        return self.sim.controller
 
     def serve_stream(
         self,

@@ -81,7 +81,7 @@ class StragglerAwareTrainer:
         self.update_fn = update_fn
         self.state = state
         self.cfg = config
-        self.controller = OnlinePolicyController(seed=config.seed)
+        self.controller = OnlinePolicyController(seed=config.seed, n_tasks=config.n_tasks)
         self._policy = config.initial_policy
         self.history: list[StepReport] = []
         self.step = 0
@@ -146,7 +146,7 @@ class StragglerAwareTrainer:
         # telemetry -> online policy adaptation
         for d in report.task_durations:
             self.controller.record_task_time(d)
-        self.controller.record_job_complete()
+        self.controller.record_job_complete(n_tasks=n)
         if self.cfg.adapt_policy and self.controller.current_policy().p > 0:
             self._policy = self.controller.current_policy()
 
