@@ -11,7 +11,7 @@ import numpy as np
 from repro.core import SingleForkPolicy, estimate
 from repro.kernels import ops, ref
 
-from .common import time_us
+from .common import GateFailure, record_gate, time_us
 
 
 def run():
@@ -52,10 +52,41 @@ def run():
     err = float(jnp.max(jnp.abs(mk - mr)))
     rows.append(("residual_sampler_ref_jnp", us_ref, f"pallas_allclose_err={err:.2e}"))
 
+    # Kiefer–Wolfowitz queue: Pallas kernel vs the vmapped lax.scan oracle.
+    # (trials × grid-cells) = 96 independent queues of 384 jobs on c=3
+    # heterogeneous slots — the exact batch shape the fused frontier feeds.
+    B, J, c = 96, 384, 3
+    kq = jax.random.split(jax.random.PRNGKey(3), 2)
+    kw_arr = jnp.cumsum(jax.random.exponential(kq[0], (B, J)) / 0.5, axis=1)
+    kw_svc = 1.0 + jax.random.exponential(kq[1], (B, J))
+    kw_speeds = jnp.array([1.0, 1.0, 0.5])
+    us_scan = time_us(lambda: ref.kw_queue_ref(kw_arr, kw_svc, kw_speeds)[1], iters=3)
+    us_kernel = time_us(lambda: ops.kw_queue(kw_arr, kw_svc, kw_speeds)[1], iters=3)
+    outs_k = ops.kw_queue(kw_arr, kw_svc, kw_speeds)
+    outs_r = ref.kw_queue_ref(kw_arr, kw_svc, kw_speeds)
+    err = max(
+        float(jnp.max(jnp.abs(a - b.astype(a.dtype)))) for a, b in zip(outs_k, outs_r)
+    )
+    qps_scan = B * 1e6 / us_scan
+    qps_kernel = B * 1e6 / us_kernel
+    rows.append(("kw_queue_scan", us_scan, f"queues_per_s={qps_scan:.0f}"))
+    rows.append(
+        ("kw_queue_kernel", us_kernel,
+         f"queues_per_s={qps_kernel:.0f};allclose_err={err:.2e}")
+    )
+    kw_failure = None  # deferred: a failed gate must not erase the rows below
+    if not record_gate(
+        "kw_queue_kernel_allclose", err <= 1e-5,
+        f"max_abs_err={err:.2e} vs lax.scan on (B,J,c)=({B},{J},{c})",
+    ):
+        kw_failure = f"kw_queue kernel disagrees with the scan oracle: {err:.2e}"
+
     # end-to-end Algorithm 1 throughput (m=1000 bootstrap replicates)
     rng = np.random.default_rng(0)
     trace = rng.exponential(100, 1026) + 50
     pol = SingleForkPolicy(0.1, 1, True)
     us = time_us(lambda: estimate(trace, pol, m=1000).latency, iters=3)
     rows.append(("algorithm1_m1000_n1026", us, "bootstrap_estimate_full"))
+    if kw_failure:
+        raise GateFailure(kw_failure, rows)
     return rows

@@ -1,12 +1,52 @@
-"""Shared benchmark utilities: timing + CSV/artifact emission."""
+"""Shared benchmark utilities: timing + CSV/artifact emission + the gate
+registry behind the repo-root BENCH_fleet.json perf trajectory."""
 
 from __future__ import annotations
 
 import json
+import subprocess
 import time
 from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parent / "results"
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+#: every acceptance gate a bench checks this run: dicts of
+#: {name, passed, detail} in evaluation order (see record_gate)
+GATES: list[dict] = []
+
+
+class GateFailure(RuntimeError):
+    """A bench's acceptance gate failed AFTER its measurements completed.
+
+    Carries the timing rows so run.py can still emit them and fold them
+    into the BENCH_fleet.json trajectory — a failed gate must not erase
+    the very measurements needed to diagnose it."""
+
+    def __init__(self, message: str, rows: list | None = None):
+        super().__init__(message)
+        self.rows = rows or []
+
+
+def record_gate(name: str, passed: bool, detail: str = "") -> bool:
+    """Register one acceptance-gate outcome for the perf trajectory
+    (benchmarks/run.py folds GATES into BENCH_fleet.json).  Returns
+    `passed` so call sites can keep their existing failure plumbing."""
+    GATES.append(dict(name=name, passed=bool(passed), detail=str(detail)))
+    return bool(passed)
+
+
+def git_sha() -> str | None:
+    try:
+        return (
+            subprocess.check_output(
+                ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT, stderr=subprocess.DEVNULL
+            )
+            .decode()
+            .strip()
+        )
+    except Exception:
+        return None
 
 
 def time_us(fn, *args, warmup: int = 1, iters: int = 5) -> float:

@@ -3,8 +3,12 @@
 #   PYTHONPATH=src python -m benchmarks.run            # everything
 #   PYTHONPATH=src python -m benchmarks.run --only trace table1
 #
-# Artifacts (full curves/tables) land in benchmarks/results/*.json.
+# Artifacts (full curves/tables) land in benchmarks/results/*.json.  Runs
+# that include the fleet or kernels benches additionally write a repo-root
+# BENCH_fleet.json perf trajectory (timings, speedups, gate outcomes, git
+# sha) so future PRs can diff hot-path regressions against this commit.
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -20,7 +24,7 @@ from . import (
     bench_table1,
     bench_trace,
 )
-from .common import emit
+from .common import GATES, REPO_ROOT, emit, git_sha
 
 BENCHES = {
     "fig3_fig5": bench_fig3_fig5,  # sim vs analytic latency (Figs. 3, 5)
@@ -34,6 +38,34 @@ BENCHES = {
     "roofline": bench_roofline,  # dry-run roofline summary
 }
 
+#: benches whose rows/gates feed the repo-root perf trajectory
+TRAJECTORY_BENCHES = ("fleet", "kernels")
+
+
+def _write_trajectory(results: dict) -> None:
+    """BENCH_fleet.json at the repo root: the hot-path perf record this
+    commit leaves behind (written even when a gate failed, so regressions
+    are diagnosable from the artifact alone).  `ok` covers only the
+    trajectory benches — an unrelated bench failing elsewhere in the run
+    must not read as a hot-path regression."""
+    payload = dict(
+        git_sha=git_sha(),
+        generated_unix=time.time(),
+        benches={
+            name: dict(
+                rows=[dict(name=r[0], us_per_call=r[1], derived=r[2]) for r in rows],
+                error=err,
+            )
+            for name, (rows, err) in results.items()
+        },
+        gates=GATES,
+        all_gates_passed=all(g["passed"] for g in GATES),
+        ok=all(err is None for _, err in results.values()),
+    )
+    path = REPO_ROOT / "BENCH_fleet.json"
+    path.write_text(json.dumps(payload, indent=1, default=float))
+    print(f"# perf trajectory -> {path}", file=sys.stderr)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -42,16 +74,26 @@ def main() -> None:
     names = args.only or list(BENCHES)
     print("name,us_per_call,derived")
     failed = 0
+    results: dict[str, tuple[list, str | None]] = {}
     for name in names:
         t0 = time.time()
+        rows: list = []
+        err = None
         try:
             rows = BENCHES[name].run()
             emit(rows)
         except Exception as e:
             failed += 1
             traceback.print_exc()
+            err = f"{type(e).__name__}: {e}"
+            rows = list(getattr(e, "rows", []))  # GateFailure keeps measurements
+            emit(rows)
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+        if name in TRAJECTORY_BENCHES:
+            results[name] = (rows, err)
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if results:
+        _write_trajectory(results)
     if failed:
         sys.exit(1)
 

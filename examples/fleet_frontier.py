@@ -1,0 +1,106 @@
+"""The fused frontier engine: a whole (λ × policy) design sweep in one
+device program, plus the Pallas Kiefer–Wolfowitz queue kernel.
+
+    PYTHONPATH=src python examples/fleet_frontier.py [--quick]
+
+The paper's design questions — when to fork, how many replicas, keep vs
+kill — are answered by scanning latency–cost frontiers.  Before this
+engine, every (λ, π) cell was its own device dispatch and every policy its
+own compilation; `vector.frontier` evaluates the entire grid as ONE fused
+program over shared common-random-number draws (so same-λ comparisons are
+variance-reduced, and one compile covers any same-shaped grid).
+
+Three demonstrations, asserted so CI can run this as a smoke test
+(`--quick` shrinks the shapes for the fast job):
+
+  1. fused frontier vs the legacy per-cell loop: same grid, same answers
+     (within Monte-Carlo error), a fraction of the wall-clock;
+  2. the Pallas kw_queue kernel (interpret mode on CPU) ≡ the lax.scan
+     recursion on identical draws — and it carries the frontier at c > 1
+     via `kernel=True`;
+  3. what the frontier is for: reading off the cheapest stable policy per
+     load level, the (p, r, keep|kill) guidance of the paper at fleet
+     scale.
+"""
+
+import sys
+import time
+
+import jax
+
+from repro.core import ShiftedExp, SingleForkPolicy
+from repro.fleet import vector
+
+QUICK = "--quick" in sys.argv
+DIST = ShiftedExp(1.0, 1.0)
+N_TASKS = 16
+N_JOBS = 200 if QUICK else 600
+M_TRIALS = 8 if QUICK else 16
+POLICIES = (
+    SingleForkPolicy(0.0, 0, True),
+    SingleForkPolicy(0.1, 1, True),
+    SingleForkPolicy(0.2, 1, False),
+    SingleForkPolicy(0.4, 1, True),
+)
+LAMS = (0.05, 0.12, 0.2) if QUICK else (0.05, 0.08, 0.12, 0.16, 0.2, 0.24)
+
+# -- 1. fused engine vs per-cell loop ---------------------------------------
+key = jax.random.PRNGKey(0)
+vector.frontier(DIST, POLICIES, LAMS, N_TASKS, N_JOBS, m_trials=M_TRIALS, key=key)
+vector.sweep_loop(DIST, POLICIES, LAMS[:1], N_TASKS, N_JOBS, m_trials=M_TRIALS, key=key)
+
+t0 = time.perf_counter()
+fused = vector.frontier(DIST, POLICIES, LAMS, N_TASKS, N_JOBS, m_trials=M_TRIALS, key=key)
+fused_s = time.perf_counter() - t0
+t0 = time.perf_counter()
+loop = vector.sweep_loop(DIST, POLICIES, LAMS, N_TASKS, N_JOBS, m_trials=M_TRIALS, key=key)
+loop_s = time.perf_counter() - t0
+
+cells = len(POLICIES) * len(LAMS)
+print(
+    f"{len(POLICIES)} policies x {len(LAMS)} loads = {cells} cells: "
+    f"fused {fused_s * 1e3:.0f}ms (one dispatch) vs per-cell loop "
+    f"{loop_s * 1e3:.0f}ms ({cells} dispatches) -> {loop_s / fused_s:.1f}x"
+)
+worst = 0.0
+for f, l in zip(fused, loop):
+    sigma = max((f["sojourn_std_err"] ** 2 + l["sojourn_std_err"] ** 2) ** 0.5, 1e-12)
+    worst = max(worst, abs(f["mean_sojourn"] - l["mean_sojourn"]) / sigma)
+print(f"agreement on every shared cell: worst deviation {worst:.2f} sigma")
+assert worst < 5.0, "fused frontier must agree with the per-cell loop"
+
+# -- 2. Pallas kw_queue kernel carries the c > 1 frontier -------------------
+kkey = jax.random.PRNGKey(1)
+scan_rows = vector.frontier(
+    DIST, POLICIES, (0.5,), N_TASKS, N_JOBS, m_trials=M_TRIALS, c=3, key=kkey
+)
+kern_rows = vector.frontier(
+    DIST, POLICIES, (0.5,), N_TASKS, N_JOBS, m_trials=M_TRIALS, c=3, key=kkey,
+    kernel=True,
+)
+kdev = max(
+    abs(a["mean_sojourn"] - b["mean_sojourn"]) for a, b in zip(scan_rows, kern_rows)
+)
+print(
+    f"\nPallas kw_queue kernel vs lax.scan at c=3 (interpret mode on CPU): "
+    f"max |dE[sojourn]| = {kdev:.2e}"
+)
+assert kdev < 1e-3, "kernel and scan paths must run the identical recursion"
+
+# -- 3. the frontier read-out: cheapest stable policy per load --------------
+print(f"\n{'lambda':>7s} {'best policy':26s} {'E[sojourn]':>10s} {'E[C]':>6s} {'rho':>5s}")
+for lam in LAMS:
+    at_lam = [r for r in fused if r["lam"] == lam]
+    stable = [r for r in at_lam if r["rho"] < 0.95] or at_lam
+    best = min(stable, key=lambda r: r["mean_sojourn"])
+    print(
+        f"{lam:7.2f} {best['policy']:26s} {best['mean_sojourn']:10.2f} "
+        f"{best['mean_cost']:6.2f} {best['rho']:5.2f}"
+    )
+
+base_hi = next(r for r in fused if r["lam"] == LAMS[-1] and r["policy"] == "baseline")
+print(
+    "\nreplication wins while the fleet has headroom; as rho climbs the "
+    f"frontier backs it off (baseline at lambda={LAMS[-1]}: "
+    f"rho={base_hi['rho']:.2f})."
+)

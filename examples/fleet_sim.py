@@ -61,15 +61,19 @@ print(
     f"for a {100 * (1 - smart.p99_sojourn / base.p99_sojourn):.0f}% lower p99."
 )
 
-# -- vectorized λ sweep (dedicated-capacity regime) -------------------------
+# -- fused λ × policy frontier (dedicated-capacity regime) ------------------
+# the whole cross-product is ONE device program over shared draws
+# (`vector.frontier`; `vector.sweep` is now a thin wrapper over it)
 lams = [0.05, 0.1, 0.15, 0.2, 0.25]
 t0 = time.time()
-rows = vector.sweep(DIST, [POLICIES[1][1]], lams, n=N_TASKS, n_jobs=N_JOBS, m_trials=16)
+rows = vector.frontier(
+    DIST, [p for _, p in POLICIES[:2]], lams, n=N_TASKS, n_jobs=N_JOBS, m_trials=16
+)
 dt = time.time() - t0
-print(f"\nvectorized lambda sweep (capacity=n regime), {dt:.2f}s for {len(rows)} cells:")
+print(f"\nfused lambda x policy frontier (capacity=n regime), {dt:.2f}s for {len(rows)} cells:")
 for r in rows:
     print(
-        f"  lambda={r['lam']:.2f}  E[sojourn]={r['mean_sojourn']:6.2f}  "
+        f"  {r['policy']:24s} lambda={r['lam']:.2f}  E[sojourn]={r['mean_sojourn']:6.2f}  "
         f"p99={r['p99']:6.1f}  util={r['utilization']:.2f}"
     )
 

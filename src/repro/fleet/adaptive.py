@@ -20,7 +20,11 @@ load-dependent (Aktaş et al., "Which Clones Should Attack and When?";
     through the Kiefer–Wolfowitz G/G/c queue at λ̂ and the fleet's class
     mix, the entire grid one fused device program — so the decision
     variable is *fleet sojourn under estimated load*, not single-job
-    latency;
+    latency.  Re-plans are recompile-free: the candidate grid is padded to
+    a fixed bucket and the fresh-draw width is pinned to `r_max + 1`
+    (`r_cap`), so an online grid change never re-traces; `use_kernel=True`
+    additionally routes the queue recursions through the Pallas
+    `kernels.kw_queue` kernel;
   * candidates whose estimated ρ ≥ `rho_max` are vetoed whenever a stable
     alternative exists (the stability guard the single-job controller
     lacks);
@@ -112,6 +116,7 @@ class FleetPolicyController:
     rho_max: float = 0.95  # stability guard: veto ρ̂ >= rho_max
     search_jobs: int = 192  # rollout horizon per candidate
     search_trials: int = 8  # independent fleets per candidate
+    use_kernel: bool = False  # queue recursions via the Pallas kw_queue kernel
     seed: int = 0
     # fleet geometry — usually bound by the scheduler, not the caller
     n_tasks: Optional[int] = None
@@ -296,10 +301,14 @@ class FleetPolicyController:
             samples = self._rng.choice(samples, size=self.window, replace=True)
         cands = self._candidates()
         c, classes = self._search_geometry(n)
+        # r_cap pins the fused program's fresh-draw width to the grid's
+        # ceiling and the candidate count pads to a fixed bucket, so every
+        # re-plan after the first reuses one compilation per geometry
         rows = vector.policy_search(
             samples, cands, lam_hat, n,
             n_jobs=self.search_jobs, m_trials=self.search_trials,
             key=self._search_key(), c=c, classes=classes,
+            kernel=self.use_kernel, r_cap=self.r_max + 1,
         )
         pick = self._choose(rows, n)
         pol = pick["policy"]
@@ -339,6 +348,7 @@ class FleetPolicyController:
                     samples, cands, lam_k, n,
                     n_jobs=self.search_jobs, m_trials=self.search_trials,
                     key=self._search_key(), classes=(k,),
+                    kernel=self.use_kernel, r_cap=self.r_max + 1,
                 )
                 class_picks[k.name] = self._choose(rows_k, n)["policy"]
             self._class_policies = dict(class_picks)

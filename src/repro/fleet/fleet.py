@@ -45,6 +45,7 @@ class FleetConfig:
     adapt: bool = False  # learn the policy online
     adapt_mode: str = "fleet"  # "fleet" (load-aware) or "online" (single-job §5.2)
     objective: str = "latency"  # controller objective when adapt=True
+    search_kernel: bool = False  # fleet controller's KW queue via the Pallas kernel
     seed: int = 0
     # heterogeneous pools: class specs + copy placement ("pooled" packs
     # fastest-free-first and may split a job across classes; "aligned"
@@ -72,7 +73,10 @@ def _build_controller(config: "FleetConfig"):
     if not config.adapt:
         return None
     if config.adapt_mode == "fleet":
-        return FleetPolicyController(objective=config.objective, seed=config.seed)
+        return FleetPolicyController(
+            objective=config.objective, seed=config.seed,
+            use_kernel=config.search_kernel,
+        )
     if config.adapt_mode == "online":
         return OnlinePolicyController(objective=config.objective, seed=config.seed)
     raise ValueError(f"unknown adapt_mode {config.adapt_mode!r}")

@@ -8,17 +8,29 @@ jobs onto whichever block frees first, so the fleet is a FIFO G/G/c queue
 whose per-job service time is the single-job makespan T(π) and whose
 per-job cost is C(π).  Concretely:
 
-  * per-job (T, C) samples come from `repro.core.simulate.single_fork_batch`
-    — the identical Definition 1/2 semantics the event path implements,
-    with all randomness drawn in bulk (two uniform calls per sweep cell
-    instead of one key split per job);
-  * `c = 1` is the Lindley recursion start_j = max(arrival_j, finish_{j-1})
-    in closed form (`lindley`: cumsum + cummax, no sequential scan at all);
-  * `c > 1` is the Kiefer–Wolfowitz multi-server recursion (`kw_queue`):
-    the c-vector of slot-free times advances one job per `lax.scan` step —
-    the job takes the fastest idle slot, else the earliest-freeing one —
-    and trials/sweep cells vmap on top, so an entire (λ, c, π) grid is one
-    fused device program;
+  * the heart of the module is one fused frontier engine: an entire
+    (λ-grid × candidate-policy) cross-product is evaluated as ONE device
+    program over shared common-random-number draws.  `masked_single_fork`
+    implements the Definition 1/2 single-fork semantics with a *dynamic*
+    fork point — (k, r, keep) enter via masks instead of shapes, so every
+    grid cell is a traced vector entry and one compilation covers any
+    same-shaped grid (any λ values, any candidate set, any reservoir
+    content on the empirical path);
+  * `frontier(dist_or_samples, policies, lams, ...)` is the public face of
+    that engine (rows match the legacy `sweep` format); `policy_search`
+    — the adaptive controller's inner loop — is the same engine at a
+    single λ; `sweep` is now a thin wrapper over `frontier`, with the
+    dispatch-per-cell legacy loop kept as `sweep_loop` (the baseline the
+    `bench_fleet` fusion gate races against);
+  * `c = 1` takes the Lindley recursion start_j = max(arrival_j,
+    finish_{j-1}) in closed form (`lindley`: cumsum + cummax, no
+    sequential scan at all);
+  * `c > 1` is the Kiefer–Wolfowitz multi-server recursion: either the
+    per-job `lax.scan` (`kw_queue`, vmapped over trials and cells) or —
+    behind the `kernel=True` switch on `fleet_rollout` / `policy_search` /
+    `frontier` — the Pallas kernel `repro.kernels.kw_queue`, which keeps
+    the slot free-time vector in VMEM and tiles (trials × grid-cells)
+    across the Pallas grid (interpret mode on CPU, Mosaic on TPU);
   * heterogeneous machine classes (`workload.MachineClass`) enter as
     per-slot speed multipliers: a job served by a speed-v slot stretches
     its whole sample path by 1/v — T, C and the slot's busy time all scale
@@ -30,15 +42,25 @@ per-job cost is C(π).  Concretely:
     `kernels.residual_sampler` (eq. (7): F̄_Y = F̄_X^{r+1}), the same kernel
     Algorithm 1 uses — one kernel call covers every job of every trial.
 
+Compilation-stability notes: grid cells are padded to power-of-two bucket
+sizes (`pad_cells=True`) and the fresh-replica draw width can be pinned via
+`r_cap`, so the adaptive controller's online re-plans never trigger a
+recompile as its candidate set flexes.  On the empirical path everything
+but (n, n_jobs, m_trials, r_cap, padded cell count, slot-array shapes) is
+traced; analytic distributions are static (one compile per family+params).
+
 Agreement with the event path on shared configs (same λ, π, n, aligned
 placement, per-class slots a multiple of n) is within Monte-Carlo error;
 tests/test_fleet.py enforces it, tests/test_fleet_properties.py checks the
-queue recursions' invariants (c=1 reduction, monotonicity in c and λ).
+queue recursions' invariants (c=1 reduction, monotonicity in c and λ,
+Pallas kernel ≡ scan), tests/test_frontier.py pins the fused engine to the
+per-cell loop.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 from typing import Optional, Sequence
 
@@ -46,7 +68,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distributions import Distribution
+from repro.core.distributions import Distribution, Empirical
 from repro.core.policy import SingleForkPolicy, num_stragglers
 from repro.core.simulate import single_fork_batch
 
@@ -55,10 +77,14 @@ from .workload import MachineClass
 __all__ = [
     "VectorFleetResult",
     "fleet_rollout",
+    "fork_draws",
+    "frontier",
     "kw_queue",
     "lindley",
+    "masked_single_fork",
     "policy_search",
     "sweep",
+    "sweep_loop",
     "trace_kill_rollout",
 ]
 
@@ -168,6 +194,10 @@ def kw_queue(arrivals, services, speeds):
     (unsorted) Kiefer–Wolfowitz workload vector and the recursion is the
     classical one; c = 1 reduces exactly to `lindley`.
 
+    This is the `lax.scan` realization; `repro.kernels.kw_queue` is the
+    same recursion as a Pallas kernel over batches of independent queues
+    (the `kernel=True` path of the rollout/search/frontier entry points).
+
     Returns (starts, finishes, scaled_services, slots), each (n_jobs,).
     """
 
@@ -195,10 +225,10 @@ def _queue_stats(arrivals, services, costs, n):
     return sojourn, wait, util
 
 
-def _queue_stats_kw(arrivals, services, costs, speeds, slot_class, class_slots, n):
-    """Per-trial G/G/c stats: the job's (T, C) stretch by its slot's speed,
-    utilization aggregates busy copy-seconds per class."""
-    starts, finishes, svc, slots = kw_queue(arrivals, services, speeds)
+def _kw_stats(arrivals, starts, finishes, svc, slots, costs, speeds, slot_class, class_slots, n):
+    """Per-trial G/G/c stats from an already-run queue recursion: the job's
+    (T, C) stretch by its slot's speed, utilization aggregates busy
+    copy-seconds per class."""
     sojourn = finishes - arrivals
     wait = starts - arrivals
     cost = costs / speeds[slots]
@@ -214,6 +244,13 @@ def _queue_stats_kw(arrivals, services, costs, speeds, slot_class, class_slots, 
     return sojourn, wait, svc, cost, util, slots, class_util
 
 
+def _queue_stats_kw(arrivals, services, costs, speeds, slot_class, class_slots, n):
+    starts, finishes, svc, slots = kw_queue(arrivals, services, speeds)
+    return _kw_stats(
+        arrivals, starts, finishes, svc, slots, costs, speeds, slot_class, class_slots, n
+    )
+
+
 @partial(jax.jit, static_argnames=("dist", "policy", "n", "n_jobs", "m_trials"))
 def _rollout_jit(key, dist, policy, lam, n, n_jobs, m_trials):
     s = num_stragglers(n, policy.p)
@@ -227,8 +264,9 @@ def _rollout_jit(key, dist, policy, lam, n, n_jobs, m_trials):
     return sojourn, wait, T, C, util
 
 
-@partial(jax.jit, static_argnames=("dist", "policy", "n", "n_jobs", "m_trials"))
-def _rollout_kw_jit(key, dist, policy, lam, n, n_jobs, m_trials, speeds, slot_class, class_slots):
+@partial(jax.jit, static_argnames=("dist", "policy", "n", "n_jobs", "m_trials", "kernel"))
+def _rollout_kw_jit(key, dist, policy, lam, n, n_jobs, m_trials, speeds, slot_class,
+                    class_slots, kernel=False):
     s = num_stragglers(n, policy.p)
     ka, ks = jax.random.split(key)
     inter = jax.random.exponential(ka, (m_trials, n_jobs)) / lam
@@ -236,24 +274,29 @@ def _rollout_kw_jit(key, dist, policy, lam, n, n_jobs, m_trials, speeds, slot_cl
     T, C = single_fork_batch(
         ks, dist, n, s, policy.r, policy.keep, shape=(m_trials, n_jobs)
     )
-    return _queue_kw_batch(arrivals, T, C, speeds, slot_class, class_slots, n)
+    return _queue_kw_batch(arrivals, T, C, speeds, slot_class, class_slots, n, kernel=kernel)
 
 
-@partial(jax.jit, static_argnames=("n",))
-def _queue_kw_batch(arrivals, T, C, speeds, slot_class, class_slots, n):
-    """Batched KW queue over already-sampled (T, C) (trace-driven path)."""
+@partial(jax.jit, static_argnames=("n", "kernel"))
+def _queue_kw_batch(arrivals, T, C, speeds, slot_class, class_slots, n, kernel=False):
+    """Batched KW queue over already-sampled (T, C): per-trial `lax.scan`s,
+    or — `kernel=True` — one Pallas call covering every trial."""
+    if kernel:
+        from repro.kernels.kw_queue import kw_queue as kw_queue_pallas
+
+        starts, fins, svc, slots = kw_queue_pallas(arrivals, T, speeds)
+        return jax.vmap(
+            lambda a, st, fi, sv, sl, c: _kw_stats(
+                a, st, fi, sv, sl, c, speeds, slot_class, class_slots, n
+            )
+        )(arrivals, starts, fins, svc, slots, C)
     return jax.vmap(
         lambda a, t, c: _queue_stats_kw(a, t, c, speeds, slot_class, class_slots, n)
     )(arrivals, T, C)
 
 
-def _slot_arrays(n: int, c: Optional[int], classes: Optional[Sequence[MachineClass]]):
-    """Resolve (c, classes) into per-job-slot arrays for the KW recursion.
-
-    Returns (speeds, slot_class, class_slots, names) with job slots ordered
-    fastest first — the same placement preference the aligned event engine
-    uses — or None when the plain c=1 Lindley path applies.
-    """
+@functools.lru_cache(maxsize=256)
+def _slot_arrays_cached(n: int, c: Optional[int], classes: Optional[tuple]):
     if classes is None:
         if c is None or c == 1:
             return None
@@ -286,6 +329,32 @@ def _slot_arrays(n: int, c: Optional[int], classes: Optional[Sequence[MachineCla
     )
 
 
+def _slot_arrays(n: int, c: Optional[int], classes: Optional[Sequence[MachineClass]]):
+    """Resolve (c, classes) into per-job-slot arrays for the KW recursion.
+
+    Returns (speeds, slot_class, class_slots, names) with job slots ordered
+    fastest first — the same placement preference the aligned event engine
+    uses — or None when the plain c=1 Lindley path applies.  Cached on the
+    hashable (n, c, classes) geometry: the adaptive re-plan loop resolves
+    the same fleet every few jobs, and rebuilding the jnp arrays each call
+    was measurable re-plan overhead.
+    """
+    if classes is not None:
+        classes = tuple(classes)
+    return _slot_arrays_cached(n, c, classes)
+
+
+def _c1_slot_arrays(n: int):
+    """The degenerate slot geometry policy_search/frontier use when no c /
+    classes are given: one unit-speed gang block."""
+    return (
+        jnp.ones((1,)),
+        jnp.zeros((1,), jnp.int32),
+        jnp.array([float(n)]),
+        ("default",),
+    )
+
+
 def fleet_rollout(
     dist: Distribution,
     policy: SingleForkPolicy,
@@ -296,6 +365,7 @@ def fleet_rollout(
     key=None,
     c: Optional[int] = None,
     classes: Optional[Sequence[MachineClass]] = None,
+    kernel: bool = False,
 ) -> VectorFleetResult:
     """m_trials independent fleets of n_jobs Poisson(λ) arrivals.
 
@@ -303,8 +373,10 @@ def fleet_rollout(
     `classes` optionally splits capacity into heterogeneous pools (each
     class's slot count must divide into whole gang blocks).  c=1 without
     classes takes the closed-form Lindley path; anything else runs the
-    Kiefer–Wolfowitz scan.  `dist` must be hashable (the analytic families
-    are frozen dataclasses); trace workloads go through
+    Kiefer–Wolfowitz recursion — as per-trial `lax.scan`s, or through the
+    Pallas `kernels.kw_queue` kernel when `kernel=True` (which also covers
+    the c=1 case, as a single-slot queue).  `dist` must be hashable (the
+    analytic families are frozen dataclasses); trace workloads go through
     `trace_kill_rollout`.
     """
     if lam <= 0:
@@ -312,6 +384,8 @@ def fleet_rollout(
     if key is None:
         key = jax.random.PRNGKey(0)
     slot = _slot_arrays(n, c, classes)
+    if slot is None and kernel:
+        slot = _c1_slot_arrays(n)
     if slot is None:
         sojourn, wait, T, C, util = _rollout_jit(
             key, dist, policy, float(lam), n, n_jobs, m_trials
@@ -321,7 +395,8 @@ def fleet_rollout(
         )
     speeds, slot_class, class_slots, names = slot
     sojourn, wait, T, C, util, slots, class_util = _rollout_kw_jit(
-        key, dist, policy, float(lam), n, n_jobs, m_trials, speeds, slot_class, class_slots
+        key, dist, policy, float(lam), n, n_jobs, m_trials, speeds, slot_class,
+        class_slots, kernel=kernel,
     )
     return VectorFleetResult(
         sojourn=sojourn,
@@ -335,37 +410,8 @@ def fleet_rollout(
     )
 
 
-def sweep(
-    dist: Distribution,
-    policies,
-    lams,
-    n: int,
-    n_jobs: int,
-    m_trials: int = 32,
-    key=None,
-    c: Optional[int] = None,
-    classes: Optional[Sequence[MachineClass]] = None,
-) -> list[dict]:
-    """Load × policy frontier: one summary row per (λ, π) cell.
-
-    λ enters the jitted rollout as a traced scalar, so the entire λ grid
-    reuses one compilation per (policy, c, class-mix).
-    """
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    rows = []
-    for policy in policies:
-        for lam in lams:
-            key, sub = jax.random.split(key)
-            res = fleet_rollout(
-                dist, policy, lam, n, n_jobs, m_trials, key=sub, c=c, classes=classes
-            )
-            rows.append(dict(lam=float(lam), policy=policy.label(), **res.summary()))
-    return rows
-
-
 # --------------------------------------------------------------------------
-# fused empirical policy search: the adaptive controller's inner loop
+# fused frontier engine: (λ × π) cross-products as ONE device program
 # --------------------------------------------------------------------------
 
 
@@ -377,44 +423,147 @@ def _emp_quantile(xs, u):
     return xs[idx]
 
 
-@partial(jax.jit, static_argnames=("n", "n_jobs", "m_trials", "r_max"))
-def _policy_search_jit(
-    key, xs, ks, rs, keeps, lam, n, n_jobs, m_trials, r_max, speeds, slot_class, class_slots
-):
-    """Evaluate EVERY candidate policy on one shared set of random draws.
+def masked_single_fork(x_sorted, fresh, k, r, keep):
+    """Single-fork (T, C) with a *dynamic* fork point (Definitions 1–2).
 
-    (k, r, keep) are per-candidate *dynamic* vectors — the fork point enters
-    via masks instead of shapes, so the whole grid vmaps into a single
-    device program: one compile covers any reservoir content, any λ̂, and
-    any same-sized candidate set.  Sharing the bootstrap draws across
-    candidates is common-random-numbers variance reduction: the argmin over
-    candidates is far sharper than independent rollouts of equal size.
+    `x_sorted`: (..., n) sorted original task-time draws; `fresh`:
+    (..., n, r_cap) fresh replica draws with r_cap >= r+1.  The fork index
+    k = n - s, replica count r, and keep|kill flag may all be traced
+    scalars: stragglers are selected by an `iota >= k` mask and unused
+    fresh-replica columns are masked to +inf before the min, so a whole
+    candidate grid vmaps over (k, r, keep) vectors into one device program
+    — no per-policy recompiles.  Draw `fresh` at a common r_cap across
+    candidates (see `fork_draws`); masking makes the extra columns inert.
+
+    Same semantics as `core.simulate.single_fork_batch` (which specializes
+    shapes per static policy); k = n (s = 0) degenerates to the baseline.
+    Returns (T, C) with the batch shape of x_sorted[..., 0].
     """
-    ka, kx, ky = jax.random.split(key, 3)
-    inter = jax.random.exponential(ka, (m_trials, n_jobs)) / lam
-    arrivals = jnp.cumsum(inter, axis=1)
-    u0 = jax.random.uniform(kx, (m_trials, n_jobs, n))
-    x_sorted = jnp.sort(_emp_quantile(xs, u0), axis=-1)
-    fresh = _emp_quantile(xs, jax.random.uniform(ky, (m_trials, n_jobs, n, r_max + 1)))
+    n = x_sorted.shape[-1]
     iota = jnp.arange(n)
-    r_iota = jnp.arange(r_max + 1)
+    t1 = jnp.take(x_sorted, k - 1, axis=-1)  # (...) fork-point time
+    straggler = iota >= k  # (n,)
+    c1 = jnp.sum(jnp.where(straggler, 0.0, x_sorted), axis=-1) + (n - k) * t1
+    # running min over the replica axis depends only on the draws, so under
+    # a vmap over (k, r, keep) grids it is computed ONCE and each cell pays
+    # a single dynamic gather — not an O(r_cap)-wide masked reduction
+    cm = jax.lax.cummin(fresh, axis=fresh.ndim - 1)
+    fresh_keep = jnp.where(r > 0, jnp.take(cm, jnp.maximum(r - 1, 0), axis=-1), jnp.inf)
+    fresh_kill = jnp.take(cm, r, axis=-1)  # min over the first r+1 draws
+    remaining = x_sorted - t1[..., None]
+    y = jnp.where(keep, jnp.minimum(remaining, fresh_keep), fresh_kill)
+    y = jnp.where(straggler, y, 0.0)
+    T = t1 + jnp.max(y, axis=-1)
+    C = (c1 + (r + 1.0) * jnp.sum(y, axis=-1)) / n
+    return T, C
 
-    def one(k, r, keep):
-        # masked single-fork semantics (Definitions 1-2, as in
-        # `single_fork_batch` but with a dynamic fork point k = n - s)
-        t1 = jnp.take(x_sorted, k - 1, axis=-1)  # (m_trials, n_jobs)
-        straggler = iota >= k  # (n,)
-        c1 = jnp.sum(jnp.where(straggler, 0.0, x_sorted), axis=-1) + (n - k) * t1
-        fresh_keep = jnp.min(jnp.where(r_iota < r, fresh, jnp.inf), axis=-1)
-        fresh_kill = jnp.min(jnp.where(r_iota < r + 1, fresh, jnp.inf), axis=-1)
-        remaining = x_sorted - t1[..., None]
-        y = jnp.where(keep, jnp.minimum(remaining, fresh_keep), fresh_kill)
-        y = jnp.where(straggler, y, 0.0)
-        T = t1 + jnp.max(y, axis=-1)
-        C = (c1 + (r + 1.0) * jnp.sum(y, axis=-1)) / n
-        soj, wait, svc, cost, util, _, _ = jax.vmap(
-            lambda a, t, c: _queue_stats_kw(a, t, c, speeds, slot_class, class_slots, n)
-        )(arrivals, T, C)
+
+def fork_draws(key, quantile, shape, n: int, r_cap: int):
+    """The common-random-number draw pair `masked_single_fork` consumes.
+
+    `quantile` is any inverse-transform: an analytic distribution's
+    `.quantile` or the empirical gather `partial(_emp_quantile, xs)` — the
+    one hook through which both kinds of service distribution enter the
+    fused engine.  Returns (x_sorted: shape+(n,), fresh: shape+(n, r_cap)).
+    """
+    kx, ky = jax.random.split(key)
+    x_sorted = jnp.sort(quantile(jax.random.uniform(kx, shape + (n,))), axis=-1)
+    fresh = quantile(jax.random.uniform(ky, shape + (n, r_cap)))
+    return x_sorted, fresh
+
+
+#: stats computed inside the fused program, in stack order; the percentile
+#: keys (p50/p99/p999) are added host-side from the returned sojourns
+_FRONTIER_JIT_KEYS = (
+    "mean_sojourn",
+    "mean_wait",
+    "mean_service",
+    "mean_cost",
+    "utilization",
+    "sojourn_std_err",
+    "rho",
+    "rho_work",
+    "rho_block",
+)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("dist", "n", "n_jobs", "m_trials", "r_cap", "kernel"),
+)
+def _frontier_jit(
+    key, xs, ks, rs, keeps, lams, speeds, slot_class, class_slots,
+    dist, n, n_jobs, m_trials, r_cap, kernel,
+):
+    """Evaluate EVERY (policy, λ) cell on one shared set of random draws.
+
+    (k, r, keep, λ) are per-cell *dynamic* vectors — the fork point enters
+    via masks instead of shapes, λ scales one shared exponential
+    inter-arrival draw — so the whole grid vmaps into a single device
+    program: one compile covers any same-sized grid (and, on the empirical
+    path, any reservoir content).  Sharing the draws across cells is
+    common-random-numbers variance reduction: frontier orderings and the
+    argmin over candidates are far sharper than independent rollouts of
+    equal size.
+    """
+    ka, kf = jax.random.split(key)
+    quantile = dist.quantile if dist is not None else partial(_emp_quantile, xs)
+    x_sorted, fresh = fork_draws(kf, quantile, (m_trials, n_jobs), n, r_cap)
+    expo_cum = jnp.cumsum(jax.random.exponential(ka, (m_trials, n_jobs)), axis=1)
+
+    def tc(k, r, keep, lam):
+        T, C = masked_single_fork(x_sorted, fresh, k, r, keep)
+        return expo_cum / lam, T, C
+
+    arrivals, T, C = jax.vmap(tc)(ks, rs, keeps, lams)  # each (cells, m, J)
+
+    cells = ks.shape[0]
+    c = speeds.shape[0]
+    if kernel:
+        # one Pallas call: (trials × grid-cells) rows tiled across its grid
+        from repro.kernels.kw_queue import kw_queue as kw_queue_pallas
+
+        flat = lambda z: z.reshape(cells * m_trials, n_jobs)  # noqa: E731
+        outs = kw_queue_pallas(flat(arrivals), flat(T), speeds)
+        starts, fins, svc, slots = (
+            z.reshape(cells, m_trials, n_jobs) for z in outs
+        )
+    elif c == 1:
+        # closed-form Lindley: no sequential scan anywhere in the program
+        svc = T / speeds[0]
+        starts, fins = jax.vmap(jax.vmap(lindley))(arrivals, svc)
+        slots = jnp.zeros(T.shape, jnp.int32)
+    else:
+        starts, fins, svc, slots = jax.vmap(
+            jax.vmap(lambda a, t: kw_queue(a, t, speeds))
+        )(arrivals, T)
+
+    n_classes = class_slots.shape[0]
+
+    def cellstats(a, st, fi, sl, sv, Tc, Cc, lam):
+        soj = fi - a
+        wait = st - a
+        cost = Cc / speeds[sl]
+        makespan = jnp.max(fi, axis=1) - a[:, 0]  # per trial
+        denom = jnp.maximum(makespan, 1e-12)
+        busy = cost * n  # copy-seconds per job (Definition 2)
+        total_busy = jnp.sum(busy, axis=1)  # per trial
+        util = jnp.mean(total_busy / (c * n * denom))
+
+        if c == 1:  # static: one slot, one class — no segment reductions
+            class_util = jnp.mean(total_busy[:, None] / (class_slots * denom[:, None]), axis=0)
+        else:
+
+            def trial_class_util(b_row, sl_row, dn):
+                slot_busy = jax.ops.segment_sum(b_row, sl_row, num_segments=c)
+                class_busy = jax.ops.segment_sum(
+                    slot_busy, slot_class, num_segments=n_classes
+                )
+                return class_busy / (class_slots * dn)
+
+            class_util = jnp.mean(jax.vmap(trial_class_util)(busy, sl, denom), axis=0)
+        per_trial = jnp.mean(soj, axis=1)
+        m = per_trial.shape[0]
         # two saturation measures, both in base work units over Σ slot speeds:
         #   rho_work  = λ·n·E[C] / Σ slots·speed — copy-seconds offered vs
         #               served (the work-conserving / pooled bound; the n's
@@ -423,36 +572,225 @@ def _policy_search_jit(
         #               the aligned/KW regime a job holds its whole block
         #               for T, so the queue diverges when THIS reaches 1
         #               even with idle task slots inside the block.
-        rho_work = lam * jnp.mean(C) / jnp.sum(speeds)
-        rho_block = lam * jnp.mean(T) / jnp.sum(speeds)
-        return jnp.stack(
+        rho_work = lam * jnp.mean(Cc) / jnp.sum(speeds)
+        rho_block = lam * jnp.mean(Tc) / jnp.sum(speeds)
+        base = jnp.stack(
             [
                 jnp.mean(soj),
                 jnp.mean(wait),
-                jnp.mean(svc),
+                jnp.mean(sv),
                 jnp.mean(cost),
-                jnp.mean(util),
-                jnp.percentile(soj, 99.0),
+                util,
+                jnp.std(per_trial) / jnp.sqrt(max(m - 1, 1)),
                 jnp.maximum(rho_work, rho_block),
                 rho_work,
                 rho_block,
             ]
         )
+        return jnp.concatenate([base, class_util]), soj
 
-    return jax.vmap(one)(ks, rs, keeps)
+    # sojourn matrices come back to the host with the stats: XLA's CPU sort
+    # is ~10x slower than np.partition, so the percentile keys are computed
+    # host-side by _eval_cells (identical linear-interpolation semantics)
+    return jax.vmap(cellstats)(arrivals, starts, fins, slots, svc, T, C, lams)
 
 
-_SEARCH_KEYS = (
-    "mean_sojourn",
-    "mean_wait",
-    "mean_service",
-    "mean_cost",
-    "utilization",
-    "p99",
-    "rho",
-    "rho_work",
-    "rho_block",
-)
+def _as_quantile_source(dist_or_samples):
+    """Normalize the frontier's first argument: (static_dist | None, xs).
+
+    Hashable analytic distributions stay static (their quantile transform
+    is traced into the program); `Empirical` instances and raw sample
+    arrays go through the traced empirical gather, so fresh telemetry never
+    recompiles.
+    """
+    if isinstance(dist_or_samples, Empirical):
+        return None, jnp.asarray(dist_or_samples.sorted, jnp.float32)
+    if isinstance(dist_or_samples, Distribution):
+        return dist_or_samples, jnp.zeros((1,), jnp.float32)
+    xs = jnp.sort(jnp.asarray(dist_or_samples, dtype=jnp.float32).ravel())
+    if xs.shape[0] < 2:
+        raise ValueError("need at least 2 samples to drive the empirical path")
+    return None, xs
+
+
+def _cell_bucket(n_cells: int) -> int:
+    """Next power-of-two bucket (>= 8): grids of any size up to the bucket
+    share one compilation."""
+    b = 8
+    while b < n_cells:
+        b *= 2
+    return b
+
+
+def _eval_cells(
+    dist_or_samples,
+    cell_policies: Sequence[SingleForkPolicy],
+    cell_lams: Sequence[float],
+    n: int,
+    n_jobs: int,
+    m_trials: int,
+    key,
+    c: Optional[int],
+    classes: Optional[Sequence[MachineClass]],
+    kernel: bool,
+    r_cap: Optional[int],
+    pad_cells: bool,
+) -> list[dict]:
+    """Shared engine behind `frontier` and `policy_search`: one stats dict
+    per (policy, λ) cell, computed by a single `_frontier_jit` dispatch."""
+    if not cell_policies:
+        raise ValueError("need at least one candidate policy")
+    if any(lam <= 0 for lam in cell_lams):
+        raise ValueError("arrival rate lam must be > 0")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    dist, xs = _as_quantile_source(dist_or_samples)
+    slot = _slot_arrays(n, c, classes)
+    speeds, slot_class, class_slots, names = slot if slot is not None else _c1_slot_arrays(n)
+
+    r_max = max(pol.r for pol in cell_policies)
+    if r_cap is None:
+        r_cap = r_max + 1
+    elif r_cap < r_max + 1:
+        raise ValueError(f"r_cap={r_cap} < r_max+1={r_max + 1}")
+
+    n_cells = len(cell_policies)
+    n_padded = _cell_bucket(n_cells) if pad_cells else n_cells
+    ks = [n - num_stragglers(n, pol.p) for pol in cell_policies]
+    rs = [pol.r for pol in cell_policies]
+    keeps = [pol.keep for pol in cell_policies]
+    lams = [float(lam) for lam in cell_lams]
+    for lst, fill in ((ks, ks[0]), (rs, rs[0]), (keeps, keeps[0]), (lams, lams[0])):
+        lst.extend([fill] * (n_padded - n_cells))
+
+    stats, soj = _frontier_jit(
+        key, xs,
+        jnp.array(ks, jnp.int32), jnp.array(rs, jnp.int32), jnp.array(keeps),
+        jnp.array(lams), speeds, slot_class, class_slots,
+        dist, n, n_jobs, m_trials, r_cap, kernel,
+    )
+    stats = np.asarray(stats)[:n_cells]
+    soj = np.asarray(soj)[:n_cells].reshape(n_cells, -1)
+    pcts = np.percentile(soj, (50.0, 99.0, 99.9), axis=1)
+    rows = []
+    nk = len(_FRONTIER_JIT_KEYS)
+    for i, (pol, lam) in enumerate(zip(cell_policies, cell_lams)):
+        row = stats[i]
+        d = dict(lam=float(lam), policy=pol.label(),
+                 **dict(zip(_FRONTIER_JIT_KEYS, map(float, row[:nk]))))
+        d["p50"], d["p99"], d["p999"] = (float(pcts[j, i]) for j in range(3))
+        if slot is not None:  # mirror VectorFleetResult.summary(): per-class util
+            for name, u in zip(names, row[nk:]):
+                d[f"util_{name}"] = float(u)
+        rows.append(d)
+    return rows
+
+
+def frontier(
+    dist_or_samples,
+    policies: Sequence[SingleForkPolicy],
+    lams,
+    n: int,
+    n_jobs: int,
+    m_trials: int = 32,
+    key=None,
+    c: Optional[int] = None,
+    classes: Optional[Sequence[MachineClass]] = None,
+    kernel: bool = False,
+    r_cap: Optional[int] = None,
+    pad_cells: bool = True,
+) -> list[dict]:
+    """Latency–cost frontier: the whole (policy × λ) cross-product as ONE
+    fused device program over shared common-random-number draws.
+
+    `dist_or_samples` is an analytic `Distribution` (static; enters via its
+    quantile transform), an `Empirical`, or a raw sample array (both
+    traced).  Rows come back policy-major in `sweep`'s format — the
+    `_SUMMARY_KEYS` plus `rho` / `rho_work` / `rho_block` saturation
+    estimates and per-class `util_*` when c > 1 or classes are given.
+
+    One compilation covers any same-shaped grid: λ and (p, r, keep) are
+    traced per-cell vectors, cell counts are padded to power-of-two buckets
+    (`pad_cells`), and `r_cap` pins the fresh-draw width (pass the largest
+    r you will ever search, e.g. the adaptive controller's `r_max + 1`).
+    `kernel=True` routes the queue recursions through the Pallas
+    `kernels.kw_queue` kernel, (trials × cells) tiled across its grid.
+    """
+    policies = list(policies)
+    lams = [float(lam) for lam in lams]
+    if not lams:
+        raise ValueError("need at least one arrival rate")
+    cell_policies = [pol for pol in policies for _ in lams]
+    cell_lams = lams * len(policies)
+    return _eval_cells(
+        dist_or_samples, cell_policies, cell_lams, n, n_jobs, m_trials, key,
+        c, classes, kernel, r_cap, pad_cells,
+    )
+
+
+def sweep(
+    dist: Distribution,
+    policies,
+    lams,
+    n: int,
+    n_jobs: int,
+    m_trials: int = 32,
+    key=None,
+    c: Optional[int] = None,
+    classes: Optional[Sequence[MachineClass]] = None,
+    kernel: bool = False,
+) -> list[dict]:
+    """Load × policy frontier: one summary row per (λ, π) cell.
+
+    Thin wrapper over the fused `frontier` engine — the entire grid is one
+    device dispatch and one compilation.  The legacy dispatch-per-cell loop
+    survives as `sweep_loop` (the baseline `bench_fleet` races the fusion
+    gate against).
+    """
+    return frontier(
+        dist, policies, lams, n, n_jobs, m_trials, key=key, c=c, classes=classes,
+        kernel=kernel,
+    )
+
+
+def sweep_loop(
+    dist: Distribution,
+    policies,
+    lams,
+    n: int,
+    n_jobs: int,
+    m_trials: int = 32,
+    key=None,
+    c: Optional[int] = None,
+    classes: Optional[Sequence[MachineClass]] = None,
+) -> list[dict]:
+    """Legacy per-cell sweep: one `fleet_rollout` dispatch per (λ, π) cell
+    (plus a recompile per policy — `policy` is a static argname on the
+    rollout jits).  Kept as the baseline the fused `frontier` is gated
+    against in `bench_fleet`.
+
+    CRN across policies: one key per λ, shared by every policy at that λ,
+    so frontier comparisons at fixed load are variance-reduced even on this
+    fallback path (previously each (λ, π) cell drew an independent key).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    lams = list(lams)
+    lam_keys = jax.random.split(key, len(lams))
+    rows = []
+    for policy in policies:
+        for j, lam in enumerate(lams):
+            res = fleet_rollout(
+                dist, policy, lam, n, n_jobs, m_trials, key=lam_keys[j], c=c,
+                classes=classes,
+            )
+            rows.append(dict(lam=float(lam), policy=policy.label(), **res.summary()))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# fused empirical policy search: the adaptive controller's inner loop
+# --------------------------------------------------------------------------
 
 
 def policy_search(
@@ -465,6 +803,9 @@ def policy_search(
     key=None,
     c: Optional[int] = None,
     classes: Optional[Sequence[MachineClass]] = None,
+    kernel: bool = False,
+    r_cap: Optional[int] = None,
+    pad_candidates: bool = True,
 ) -> list[dict]:
     """Score candidate policies on an empirical trace at an estimated load.
 
@@ -472,49 +813,36 @@ def policy_search(
     π(p, r, keep|kill) are bootstrap-resampled from `samples` (Algorithm 1
     semantics) and pushed through the Kiefer–Wolfowitz G/G/c queue at
     arrival rate `lam` — so a policy is judged by its *fleet* sojourn under
-    queueing, not its single-job latency.  The entire candidate grid runs
-    as one fused device program (candidates vmapped over shared draws);
-    `samples`, `lam` and the slot arrays are traced, so repeated calls with
-    fresh telemetry reuse one compilation as long as the sample count and
-    candidate set are unchanged (the adaptive controller bootstrap-
-    resamples its reservoir to a fixed length for exactly this reason).
+    queueing, not its single-job latency.  It is the fused frontier engine
+    at a single λ: the entire candidate grid runs as one device program
+    over shared bootstrap draws (common-random-numbers, so the argmin over
+    candidates is far sharper than independent rollouts of equal size), and
+    with `pad_candidates` (power-of-two cell buckets) plus a pinned `r_cap`
+    an online re-plan never recompiles as the candidate set flexes.
+    `kernel=True` runs the queue recursions through the Pallas
+    `kernels.kw_queue` kernel.
 
     Returns one dict per candidate: the policy itself, its label, mean
-    sojourn/wait/service/cost, utilization, p99 sojourn, and saturation
-    estimates — `rho_work` (copy-seconds: λ·n·E[C] / Σ slots·speed),
-    `rho_block` (gang-block occupancy: λ·E[T] / Σ block speeds, the bound
-    that actually governs the aligned/KW queue), and `rho` = max of the
-    two; `rho >= 1` marks a policy this fleet cannot absorb at `lam`.
+    sojourn/wait/service/cost, utilization, percentile sojourns, and
+    saturation estimates — `rho_work` (copy-seconds: λ·n·E[C] / Σ
+    slots·speed), `rho_block` (gang-block occupancy: λ·E[T] / Σ block
+    speeds, the bound that actually governs the aligned/KW queue), and
+    `rho` = max of the two; `rho >= 1` marks a policy this fleet cannot
+    absorb at `lam`.
     """
     if lam <= 0:
         raise ValueError("arrival rate lam must be > 0")
-    if not candidates:
-        raise ValueError("need at least one candidate policy")
-    samples = jnp.sort(jnp.asarray(samples, dtype=jnp.float32).ravel())
-    if samples.shape[0] < 2:
-        raise ValueError("need at least 2 samples to search policies")
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    slot = _slot_arrays(n, c, classes)
-    if slot is None:  # c = 1 homogeneous: a single unit-speed job slot
-        speeds = jnp.ones((1,))
-        slot_class = jnp.zeros((1,), jnp.int32)
-        class_slots = jnp.array([float(n)])
-    else:
-        speeds, slot_class, class_slots, _ = slot
-    ks = jnp.array([n - num_stragglers(n, pol.p) for pol in candidates], jnp.int32)
-    rs = jnp.array([pol.r for pol in candidates], jnp.int32)
-    keeps = jnp.array([pol.keep for pol in candidates])
-    r_max = max(pol.r for pol in candidates)
-    stats = _policy_search_jit(
-        key, samples, ks, rs, keeps, float(lam), n, n_jobs, m_trials, r_max,
-        speeds, slot_class, class_slots,
+    candidates = list(candidates)
+    rows = _eval_cells(
+        samples, candidates, [float(lam)] * len(candidates), n, n_jobs, m_trials,
+        key, c, classes, kernel, r_cap, pad_candidates,
     )
-    stats = np.asarray(stats)
-    return [
-        dict(policy=pol, label=pol.label(), **dict(zip(_SEARCH_KEYS, map(float, row))))
-        for pol, row in zip(candidates, stats)
-    ]
+    out = []
+    for pol, row in zip(candidates, rows):
+        row.pop("policy", None)
+        row.pop("lam", None)
+        out.append(dict(policy=pol, label=pol.label(), **row))
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -532,6 +860,7 @@ def trace_kill_rollout(
     key=None,
     c: Optional[int] = None,
     classes: Optional[Sequence[MachineClass]] = None,
+    kernel: bool = False,
 ) -> VectorFleetResult:
     """Fleet rollout where task times bootstrap an empirical trace, π_kill.
 
@@ -539,6 +868,7 @@ def trace_kill_rollout(
     F̂_X^{-1}(u) = xs[ceil(u·n)-1]; the straggler residuals (min over r+1
     fresh draws, eq. (7)) run through `kernels.residual_sampler` — a single
     kernel call of shape (m_trials·n_jobs, s, r+1) covers the whole fleet.
+    `kernel=True` additionally runs the queue through `kernels.kw_queue`.
     """
     from repro.kernels.residual_sampler import residual_sample
 
@@ -548,7 +878,6 @@ def trace_kill_rollout(
         raise ValueError("arrival rate lam must be > 0")
     if key is None:
         key = jax.random.PRNGKey(0)
-    from repro.core.distributions import Empirical
 
     emp = Empirical(samples)
     xs = emp.sorted
@@ -577,6 +906,8 @@ def trace_kill_rollout(
     inter = jax.random.exponential(k2, (m_trials, n_jobs)) / lam
     arrivals = jnp.cumsum(inter, axis=1)
     slot = _slot_arrays(n, c, classes)
+    if slot is None and kernel:
+        slot = _c1_slot_arrays(n)
     if slot is None:
         sojourn, wait, util = jax.vmap(partial(_queue_stats, n=n))(arrivals, T, C)
         return VectorFleetResult(
@@ -584,7 +915,7 @@ def trace_kill_rollout(
         )
     speeds, slot_class, class_slots, names = slot
     sojourn, wait, T, C, util, slots, class_util = _queue_kw_batch(
-        arrivals, T, C, speeds, slot_class, class_slots, n
+        arrivals, T, C, speeds, slot_class, class_slots, n, kernel=kernel
     )
     return VectorFleetResult(
         sojourn=sojourn,

@@ -1,0 +1,117 @@
+"""Multi-server Kiefer–Wolfowitz queue recursion as a Pallas kernel.
+
+The G/G/c recursion start_j = max(arrival_j, free-time of the chosen slot)
+is inherently sequential over jobs, but a frontier evaluation runs
+(trials × grid-cells) *independent* queues — the fused `fleet.vector`
+engine flattens that batch into rows and this kernel tiles the rows across
+the Pallas grid.  Memory layout per grid step:
+
+  * the c-vector of slot free-times lives in registers/VMEM for a block of
+    `block_b` queues and never touches HBM (the whole point: the scan
+    version materializes an (n_jobs, c) carry trace through XLA's scan);
+  * arrivals/services stream in as (block_b, n_jobs) VMEM tiles, the four
+    outputs (start, finish, scaled service, serving slot) stream out the
+    same way;
+  * jobs advance with a `fori_loop` inside the kernel; slot selection is
+    branch-free min/where reductions over the lane axis (no gather/argmin,
+    so the body lowers through Mosaic as pure VPU ops).
+
+Semantics are identical to `repro.fleet.vector.kw_queue` (the lax.scan
+reference): job j takes the lowest-indexed slot already idle at its
+arrival — slots are ordered fastest first — else the earliest-freeing
+slot (ties toward lower index); its service requirement stretches by the
+chosen slot's speed.  Oracle: kernels/ref.py::kw_queue_ref; interpret-mode
+fallback on CPU follows the `residual_sampler` pattern.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, s_ref, sp_ref, start_ref, fin_ref, svc_ref, slot_ref, *, n_jobs, c):
+    a = a_ref[...]  # (block_b, n_jobs)
+    s = s_ref[...]
+    b = a.shape[0]
+    speeds = jnp.broadcast_to(sp_ref[...].reshape(1, c), (b, c))
+    lane = jax.lax.broadcasted_iota(jnp.int32, (b, c), 1)
+    big = jnp.int32(c)  # sentinel lane: "no idle slot"
+
+    def body(j, carry):
+        free, starts, fins, svcs, slots = carry
+        aj = jax.lax.dynamic_slice(a, (0, j), (b, 1))
+        sj = jax.lax.dynamic_slice(s, (0, j), (b, 1))
+        idle = free <= aj
+        first_idle = jnp.min(jnp.where(idle, lane, big), axis=1, keepdims=True)
+        min_free = jnp.min(free, axis=1, keepdims=True)
+        soonest = jnp.min(jnp.where(free == min_free, lane, big), axis=1, keepdims=True)
+        slot = jnp.where(first_idle < big, first_idle, soonest)
+        hit = lane == slot
+        free_sel = jnp.sum(jnp.where(hit, free, 0.0), axis=1, keepdims=True)
+        speed_sel = jnp.sum(jnp.where(hit, speeds, 0.0), axis=1, keepdims=True)
+        start = jnp.maximum(aj, free_sel)
+        svc = sj / speed_sel
+        finish = start + svc
+        free = jnp.where(hit, finish, free)
+        starts = jax.lax.dynamic_update_slice(starts, start, (0, j))
+        fins = jax.lax.dynamic_update_slice(fins, finish, (0, j))
+        svcs = jax.lax.dynamic_update_slice(svcs, svc, (0, j))
+        slots = jax.lax.dynamic_update_slice(slots, slot, (0, j))
+        return free, starts, fins, svcs, slots
+
+    dt = a.dtype
+    init = (
+        jnp.zeros((b, c), dt),
+        jnp.zeros((b, n_jobs), dt),
+        jnp.zeros((b, n_jobs), dt),
+        jnp.zeros((b, n_jobs), dt),
+        jnp.zeros((b, n_jobs), jnp.int32),
+    )
+    _, starts, fins, svcs, slots = jax.lax.fori_loop(0, n_jobs, body, init)
+    start_ref[...] = starts
+    fin_ref[...] = fins
+    svc_ref[...] = svcs
+    slot_ref[...] = slots
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def kw_queue(arrivals, services, speeds, *, block_b: int = 8, interpret: bool | None = None):
+    """arrivals, services: (n_queues, n_jobs) independent FIFO queues;
+    speeds: (c,) per-slot speed multipliers, sorted descending.
+    Returns (starts, finishes, scaled_services, slots), each (n_queues, n_jobs)."""
+    if interpret is None:
+        from repro.kernels import INTERPRET
+
+        interpret = INTERPRET
+    B, J = arrivals.shape
+    c = speeds.shape[0]
+    pad_b = (-B) % block_b
+    if pad_b:
+        arrivals = jnp.pad(arrivals, ((0, pad_b), (0, 0)))
+        services = jnp.pad(services, ((0, pad_b), (0, 0)), constant_values=1.0)
+    Bp = arrivals.shape[0]
+    grid = (Bp // block_b,)
+    kernel = functools.partial(_kernel, n_jobs=J, c=c)
+    fdt = arrivals.dtype
+    starts, fins, svcs, slots = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, J), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, J), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((block_b, J), lambda i: (i, 0))] * 4,
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, J), fdt),
+            jax.ShapeDtypeStruct((Bp, J), fdt),
+            jax.ShapeDtypeStruct((Bp, J), fdt),
+            jax.ShapeDtypeStruct((Bp, J), jnp.int32),
+        ],
+        interpret=interpret,
+    )(arrivals, services, speeds)
+    return starts[:B], fins[:B], svcs[:B], slots[:B]

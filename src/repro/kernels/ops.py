@@ -6,5 +6,6 @@ TPU they compile through Mosaic.
 """
 
 from .flash_attention import flash_attention  # noqa: F401
+from .kw_queue import kw_queue  # noqa: F401
 from .residual_sampler import residual_sample  # noqa: F401
 from .ssd_scan import ssd_scan  # noqa: F401

@@ -56,6 +56,29 @@ def ssd_recurrence_ref(x, dt, A, B, C, D):
     return y.astype(x.dtype), hT
 
 
+def kw_queue_ref(arrivals, services, speeds):
+    """Batched Kiefer–Wolfowitz G/G/c oracle: the per-queue lax.scan the
+    fleet fast path uses (`repro.fleet.vector.kw_queue`), vmapped over
+    independent queues.  arrivals/services: (n_queues, n_jobs); speeds:
+    (c,) sorted descending.  Returns (starts, finishes, scaled_services,
+    slots), each (n_queues, n_jobs)."""
+
+    def one(a, s):
+        def step(free, inp):
+            aj, sj = inp
+            idle = free <= aj
+            slot = jnp.where(jnp.any(idle), jnp.argmax(idle), jnp.argmin(free))
+            start = jnp.maximum(aj, free[slot])
+            svc = sj / speeds[slot]
+            finish = start + svc
+            return free.at[slot].set(finish), (start, finish, svc, slot)
+
+        _, outs = jax.lax.scan(step, jnp.zeros_like(speeds), (a, s))
+        return outs
+
+    return jax.vmap(one)(arrivals, services)
+
+
 def residual_sample_ref(u, xs):
     """u: (m,s,k) uniforms, xs: (n,) sorted.  Empirical inverse transform,
     min over replicas, then per-trial (max, sum)."""

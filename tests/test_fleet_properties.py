@@ -189,6 +189,68 @@ def test_batch_busy_period_service_permutation_invariant(services, seed):
     assert float(f1[-1]) == pytest.approx(float(f2[-1]), rel=1e-4)
 
 
+# ------------------------------------------- Pallas kernel path parity
+
+
+@given(pairs=_paths, c=st.integers(min_value=1, max_value=4))
+@settings(max_examples=20, deadline=None)
+def test_kernel_queue_matches_scan(pairs, c):
+    """The Pallas kw_queue kernel (interpret mode) reproduces the lax.scan
+    recursion path by path — so every monotonicity/sanity property proved
+    above transfers to the kernel path verbatim."""
+    from repro.kernels.kw_queue import kw_queue as kw_kernel
+
+    arrivals, services = _queues(pairs)
+    speeds = jnp.ones((c,))
+    outs_scan = _kw(arrivals, services, c)
+    outs_kernel = kw_kernel(arrivals[None, :], services[None, :], speeds)
+    for a, b in zip(outs_kernel[:3], outs_scan[:3]):
+        np.testing.assert_allclose(
+            np.asarray(a[0]), np.asarray(b), rtol=1e-5, atol=_tol(outs_scan[1])
+        )
+    assert np.array_equal(np.asarray(outs_kernel[3][0]), np.asarray(outs_scan[3]))
+
+
+def test_kernel_waits_monotone_fixed_burst():
+    """The fixed-burst monotonicity story holds on the kernel path too."""
+    from repro.kernels.kw_queue import kw_queue as kw_kernel
+
+    arrivals = jnp.array([[0.1, 0.2, 0.3, 0.4]])
+    services = jnp.array([[10.0, 10.0, 10.0, 10.0]])
+    waits = []
+    for c in (1, 2, 4):
+        starts, _, _, _ = kw_kernel(arrivals, services, jnp.ones((c,)))
+        waits.append(float(jnp.sum(starts - arrivals)))
+    assert waits[0] > waits[1] > waits[2]
+    assert waits[2] == pytest.approx(0.0, abs=1e-6)
+
+
+def test_fleet_rollout_kernel_path_matches_scan_path():
+    """`fleet_rollout(kernel=True)` is bit-for-bit the scan path (same key,
+    same draws, identical queue recursion) for homogeneous and mixed
+    fleets."""
+    from repro.core import ShiftedExp, SingleForkPolicy
+    from repro.fleet import MachineClass
+
+    dist, pol = ShiftedExp(1.0, 1.0), SingleForkPolicy(0.2, 1, True)
+    import jax
+
+    for kwargs in (dict(c=3), dict(classes=(MachineClass("fast", 16, 1.0),
+                                            MachineClass("slow", 16, 0.5)))):
+        key = jax.random.PRNGKey(4)
+        a = vector.fleet_rollout(dist, pol, 0.4, 8, 80, m_trials=6, key=key, **kwargs)
+        b = vector.fleet_rollout(
+            dist, pol, 0.4, 8, 80, m_trials=6, key=key, kernel=True, **kwargs
+        )
+        np.testing.assert_allclose(
+            np.asarray(a.sojourn), np.asarray(b.sojourn), rtol=1e-6, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(a.cost), np.asarray(b.cost), rtol=1e-6, atol=1e-6
+        )
+        assert np.array_equal(np.asarray(a.slot), np.asarray(b.slot))
+
+
 # ---------------------------------------- rollout-level glue invariants
 
 

@@ -85,6 +85,77 @@ def test_ssd_chunked_matches_recurrence():
     np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_r), atol=2e-3, rtol=1e-3)
 
 
+# ----------------------------------------------------------------- kw queue
+KW_CASES = [
+    # (n_queues, n_jobs, c) — B deliberately not a multiple of block_b
+    (4, 37, 1),
+    (8, 64, 3),
+    (13, 48, 4),
+    (1, 200, 2),
+]
+
+
+def _kw_inputs(B, J, c, seed=0, lam=0.5):
+    ka, ks = jax.random.split(jax.random.PRNGKey(seed))
+    arr = jnp.cumsum(jax.random.exponential(ka, (B, J)) / lam, axis=1)
+    svc = 0.5 + jax.random.exponential(ks, (B, J))
+    speeds = jnp.sort(0.5 + jax.random.uniform(jax.random.PRNGKey(seed + 1), (c,)))[::-1]
+    return arr, svc, speeds
+
+
+@pytest.mark.parametrize("B,J,c", KW_CASES)
+def test_kw_queue_kernel_matches_ref(B, J, c):
+    """Pallas kernel ≡ the vmapped lax.scan oracle to 1e-5 (interpret)."""
+    arr, svc, speeds = _kw_inputs(B, J, c)
+    outs_k = ops.kw_queue(arr, svc, speeds)
+    outs_r = ref.kw_queue_ref(arr, svc, speeds)
+    for a, b in zip(outs_k[:3], outs_r[:3]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(outs_k[3]), np.asarray(outs_r[3]))  # slots
+
+
+def test_kw_queue_kernel_matches_fleet_scan():
+    """And ≡ the fleet fast path's own scan (`vector.kw_queue`), per queue."""
+    from repro.fleet import vector as fleet_vector
+
+    arr, svc, speeds = _kw_inputs(6, 50, 3, seed=5)
+    outs_k = ops.kw_queue(arr, svc, speeds)
+    for i in range(arr.shape[0]):
+        outs_s = fleet_vector.kw_queue(arr[i], svc[i], speeds)
+        for a, b in zip(outs_k[:3], outs_s[:3]):
+            np.testing.assert_allclose(np.asarray(a[i]), np.asarray(b), rtol=1e-5, atol=1e-5)
+        assert np.array_equal(np.asarray(outs_k[3][i]), np.asarray(outs_s[3]))
+
+
+def test_kw_queue_kernel_heterogeneous_speeds_scale_service():
+    """Whatever slot serves a job, its service stretches by that slot's
+    speed (the heterogeneous-class semantics of the fleet fast path)."""
+    arr, svc, _ = _kw_inputs(5, 40, 3, seed=9)
+    speeds = jnp.array([2.0, 1.0, 0.5])
+    starts, fins, scaled, slots = ops.kw_queue(arr, svc, speeds)
+    sl = np.asarray(slots)
+    assert sl.min() >= 0 and sl.max() < 3
+    np.testing.assert_allclose(
+        np.asarray(scaled), np.asarray(svc) / np.asarray(speeds)[sl], rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(fins - starts), np.asarray(scaled), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_kw_queue_kernel_c1_matches_lindley():
+    """One slot: the kernel IS the closed-form Lindley recursion."""
+    from repro.fleet.vector import lindley
+
+    arr, svc, _ = _kw_inputs(7, 60, 1, seed=3)
+    starts, fins, _, slots = ops.kw_queue(arr, svc, jnp.ones((1,)))
+    assert np.all(np.asarray(slots) == 0)
+    for i in range(arr.shape[0]):
+        s_lin, f_lin = lindley(arr[i], svc[i])
+        np.testing.assert_allclose(np.asarray(starts[i]), np.asarray(s_lin), rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(fins[i]), np.asarray(f_lin), rtol=1e-5, atol=1e-4)
+
+
 # ---------------------------------------------------------- residual sampler
 @pytest.mark.parametrize("m,s,k,n", [(33, 50, 3, 1000), (8, 16, 1, 100), (100, 205, 4, 488)])
 def test_residual_sampler_matches_ref(m, s, k, n):
