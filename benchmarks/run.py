@@ -14,6 +14,7 @@ import time
 import traceback
 
 from . import (
+    bench_dag,
     bench_fig3_fig5,
     bench_fig4_fig6,
     bench_fleet,
@@ -35,11 +36,12 @@ BENCHES = {
     "kernels": bench_kernels,  # Pallas kernels + Algorithm 1 throughput
     "runtime": bench_runtime,  # trainer/serving economics
     "fleet": bench_fleet,  # multi-job finite-capacity frontier
+    "dag": bench_dag,  # multi-stage DAG jobs: fused stage rollout + joint search
     "roofline": bench_roofline,  # dry-run roofline summary
 }
 
 #: benches whose rows/gates feed the repo-root perf trajectory
-TRAJECTORY_BENCHES = ("fleet", "kernels")
+TRAJECTORY_BENCHES = ("fleet", "kernels", "dag")
 
 
 def _write_trajectory(results: dict) -> None:
@@ -47,22 +49,46 @@ def _write_trajectory(results: dict) -> None:
     commit leaves behind (written even when a gate failed, so regressions
     are diagnosable from the artifact alone).  `ok` covers only the
     trajectory benches — an unrelated bench failing elsewhere in the run
-    must not read as a hot-path regression."""
-    payload = dict(
-        git_sha=git_sha(),
-        generated_unix=time.time(),
-        benches={
+    must not read as a hot-path regression.
+
+    Partial runs merge: `--only dag` refreshes the dag entry (and the
+    gates that run recorded) while keeping the other trajectory benches'
+    rows and gate outcomes from the existing file, so iterating on one
+    bench never erases the baselines future PRs diff against.  `ok` /
+    `all_gates_passed` are recomputed over the merged content."""
+    path = REPO_ROOT / "BENCH_fleet.json"
+    benches = {}
+    gates = list(GATES)
+    if path.exists():
+        try:
+            prev = json.loads(path.read_text())
+            benches = {
+                k: v for k, v in prev.get("benches", {}).items()
+                if k in TRAJECTORY_BENCHES
+            }
+            fresh = {g["name"] for g in gates}
+            gates = [
+                g for g in prev.get("gates", []) if g["name"] not in fresh
+            ] + gates
+        except (json.JSONDecodeError, OSError):
+            pass  # corrupt/unreadable: rebuild from this run alone
+    benches.update(
+        {
             name: dict(
                 rows=[dict(name=r[0], us_per_call=r[1], derived=r[2]) for r in rows],
                 error=err,
             )
             for name, (rows, err) in results.items()
-        },
-        gates=GATES,
-        all_gates_passed=all(g["passed"] for g in GATES),
-        ok=all(err is None for _, err in results.values()),
+        }
     )
-    path = REPO_ROOT / "BENCH_fleet.json"
+    payload = dict(
+        git_sha=git_sha(),
+        generated_unix=time.time(),
+        benches=benches,
+        gates=gates,
+        all_gates_passed=all(g["passed"] for g in gates),
+        ok=all(b.get("error") is None for b in benches.values()),
+    )
     path.write_text(json.dumps(payload, indent=1, default=float))
     print(f"# perf trajectory -> {path}", file=sys.stderr)
 

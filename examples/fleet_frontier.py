@@ -6,7 +6,7 @@ device program, plus the Pallas Kiefer–Wolfowitz queue kernel.
 The paper's design questions — when to fork, how many replicas, keep vs
 kill — are answered by scanning latency–cost frontiers.  Before this
 engine, every (λ, π) cell was its own device dispatch and every policy its
-own compilation; `vector.frontier` evaluates the entire grid as ONE fused
+own compilation; `repro.fleet.frontier` evaluates the entire grid as ONE fused
 program over shared common-random-number draws (so same-λ comparisons are
 variance-reduced, and one compile covers any same-shaped grid).
 
@@ -29,7 +29,8 @@ import time
 import jax
 
 from repro.core import ShiftedExp, SingleForkPolicy
-from repro.fleet import vector
+from repro.fleet import frontier
+from repro.fleet.vector import sweep_loop  # legacy per-cell baseline
 
 QUICK = "--quick" in sys.argv
 DIST = ShiftedExp(1.0, 1.0)
@@ -46,14 +47,14 @@ LAMS = (0.05, 0.12, 0.2) if QUICK else (0.05, 0.08, 0.12, 0.16, 0.2, 0.24)
 
 # -- 1. fused engine vs per-cell loop ---------------------------------------
 key = jax.random.PRNGKey(0)
-vector.frontier(DIST, POLICIES, LAMS, N_TASKS, N_JOBS, m_trials=M_TRIALS, key=key)
-vector.sweep_loop(DIST, POLICIES, LAMS[:1], N_TASKS, N_JOBS, m_trials=M_TRIALS, key=key)
+frontier(DIST, POLICIES, LAMS, N_TASKS, N_JOBS, m_trials=M_TRIALS, key=key)
+sweep_loop(DIST, POLICIES, LAMS[:1], N_TASKS, N_JOBS, m_trials=M_TRIALS, key=key)
 
 t0 = time.perf_counter()
-fused = vector.frontier(DIST, POLICIES, LAMS, N_TASKS, N_JOBS, m_trials=M_TRIALS, key=key)
+fused = frontier(DIST, POLICIES, LAMS, N_TASKS, N_JOBS, m_trials=M_TRIALS, key=key)
 fused_s = time.perf_counter() - t0
 t0 = time.perf_counter()
-loop = vector.sweep_loop(DIST, POLICIES, LAMS, N_TASKS, N_JOBS, m_trials=M_TRIALS, key=key)
+loop = sweep_loop(DIST, POLICIES, LAMS, N_TASKS, N_JOBS, m_trials=M_TRIALS, key=key)
 loop_s = time.perf_counter() - t0
 
 cells = len(POLICIES) * len(LAMS)
@@ -71,10 +72,10 @@ assert worst < 5.0, "fused frontier must agree with the per-cell loop"
 
 # -- 2. Pallas kw_queue kernel carries the c > 1 frontier -------------------
 kkey = jax.random.PRNGKey(1)
-scan_rows = vector.frontier(
+scan_rows = frontier(
     DIST, POLICIES, (0.5,), N_TASKS, N_JOBS, m_trials=M_TRIALS, c=3, key=kkey
 )
-kern_rows = vector.frontier(
+kern_rows = frontier(
     DIST, POLICIES, (0.5,), N_TASKS, N_JOBS, m_trials=M_TRIALS, c=3, key=kkey,
     kernel=True,
 )

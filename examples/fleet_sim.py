@@ -17,7 +17,14 @@ small-p policy in a fraction of the event engine's time.
 import time
 
 from repro.core import ShiftedExp, SingleForkPolicy
-from repro.fleet import FleetConfig, FleetSim, MachineClass, poisson_workload, vector
+from repro.fleet import (
+    FleetConfig,
+    FleetSim,
+    MachineClass,
+    fleet_rollout,
+    frontier,
+    poisson_workload,
+)
 
 DIST = ShiftedExp(1.0, 1.0)  # task times: 1s floor + Exp(1) tail
 N_TASKS = 20  # tasks per job (gang-scheduled)
@@ -63,10 +70,10 @@ print(
 
 # -- fused λ × policy frontier (dedicated-capacity regime) ------------------
 # the whole cross-product is ONE device program over shared draws
-# (`vector.frontier`; `vector.sweep` is now a thin wrapper over it)
+# (`repro.fleet.frontier`; `sweep` is now a thin wrapper over it)
 lams = [0.05, 0.1, 0.15, 0.2, 0.25]
 t0 = time.time()
-rows = vector.frontier(
+rows = frontier(
     DIST, [p for _, p in POLICIES[:2]], lams, n=N_TASKS, n_jobs=N_JOBS, m_trials=16
 )
 dt = time.time() - t0
@@ -82,7 +89,7 @@ for r in rows:
 # capacity-planning curve is a handful of fused device programs.
 print("\ncapacity planning via the KW fast path (lambda=0.6, pi_keep(0.05,1)):")
 for c in (1, 2, 3, 4):
-    res = vector.fleet_rollout(
+    res = fleet_rollout(
         DIST, POLICIES[1][1], lam=0.6, n=N_TASKS, n_jobs=N_JOBS, m_trials=16, c=c
     )
     print(
@@ -101,7 +108,7 @@ for n_fast, n_slow in ((4, 0), (3, 1), (2, 2), (1, 3)):
         cls.append(MachineClass("fast", n_fast * N_TASKS, 1.0))
     if n_slow:
         cls.append(MachineClass("slow", n_slow * N_TASKS, 0.5))
-    res = vector.fleet_rollout(
+    res = fleet_rollout(
         DIST, POLICIES[1][1], lam=0.6, n=N_TASKS, n_jobs=N_JOBS,
         m_trials=16, classes=tuple(cls),
     )

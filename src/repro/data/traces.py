@@ -20,6 +20,17 @@ import numpy as np
 
 TRACE_JOBS = ("job1", "job2", "job3")
 
+#: stage-labeled view of the same synthesized traces for DAG workloads
+#: (repro.dag): in the Google-trace evaluation map and reduce phases draw
+#: from *different* empirical shapes, and which trace plays which stage is
+#: exactly what makes per-stage policies diverge —
+#:   map     -> job1  (heavy straggler tail: small-p replication cuts both
+#:              E[T] and E[C], so the map stage WANTS forking)
+#:   shuffle -> job2  (bimodal with a handful of extreme stragglers)
+#:   reduce  -> job3  (tail-shortened: replication only burns slots, and
+#:              killing actively hurts — the reduce stage wants BASELINE)
+STAGE_TRACES = {"map": "job1", "shuffle": "job2", "reduce": "job3"}
+
 #: documented task counts (paper Fig. 7)
 _N_TASKS = {"job1": 1026, "job2": 488}
 
@@ -62,3 +73,23 @@ def synthesize_trace(job: str, seed: int = 0) -> np.ndarray:
 def load_trace(job: str, seed: int = 0) -> np.ndarray:
     """Alias kept so a real Google-trace loader can slot in unchanged."""
     return synthesize_trace(job, seed)
+
+
+def load_stage_trace(stage: str, seed: int = 0, normalize: bool = True) -> np.ndarray:
+    """Execution-time samples for one MapReduce *stage* (repro.dag).
+
+    Resolves the stage label through `STAGE_TRACES` (map/shuffle/reduce →
+    the synthesized Fig. 7 job whose shape plays that role) and, by
+    default, rescales to mean 1.0 so different stages impose comparable
+    per-task load and a DAG's stage pools can be sized in common units —
+    the same normalization `fleet.trace_workload` applies.  Pass
+    `normalize=False` for the raw seconds.
+    """
+    if stage not in STAGE_TRACES:
+        raise KeyError(
+            f"unknown stage {stage!r}; expected one of {sorted(STAGE_TRACES)}"
+        )
+    x = synthesize_trace(STAGE_TRACES[stage], seed=seed)
+    if normalize:
+        x = x / np.mean(x)
+    return x

@@ -9,7 +9,7 @@
 #   * `repro.fleet.vector` — vmapped many-trial JAX rollouts for the
 #     gang-aligned G/G/c regime (Kiefer–Wolfowitz recursion, heterogeneous
 #     machine classes as per-slot speeds), for policy sweeps.
-from .events import Event, EventHeap  # noqa: F401
+from .events import Event, EventHeap, OwnedHeap  # noqa: F401
 from .workload import (  # noqa: F401
     Job,
     MachineClass,
@@ -28,6 +28,58 @@ from .adaptive import (  # noqa: F401
 )
 from .scenarios import REGIME_SHIFT, RegimeShiftScenario  # noqa: F401
 from .scheduler import FleetScheduler, JobRecord  # noqa: F401
-from .metrics import FleetStats, compute_stats  # noqa: F401
+from .metrics import (  # noqa: F401
+    DagStats,
+    FleetStats,
+    compute_dag_stats,
+    compute_stats,
+    dag_critical_path_shares,
+)
 from .fleet import FleetConfig, FleetReport, FleetSim, run_fleet  # noqa: F401
 from . import vector  # noqa: F401
+# the PR-4 fused-engine public surface, re-exported so examples and user
+# code stop reaching into repro.fleet.vector by module path
+from .vector import (  # noqa: F401
+    fleet_rollout,
+    frontier,
+    policy_search,
+    sweep,
+    trace_kill_rollout,
+)
+
+__all__ = [
+    "DagStats",
+    "Event",
+    "EventHeap",
+    "FleetConfig",
+    "FleetPolicyController",
+    "FleetReport",
+    "FleetScheduler",
+    "FleetSim",
+    "FleetStats",
+    "Job",
+    "JobRecord",
+    "MachineClass",
+    "OwnedHeap",
+    "PolicyDecision",
+    "REGIME_SHIFT",
+    "RegimeShiftScenario",
+    "as_policy_provider",
+    "bursty_workload",
+    "compute_dag_stats",
+    "compute_stats",
+    "dag_critical_path_shares",
+    "diurnal_workload",
+    "fleet_rollout",
+    "frontier",
+    "ks_statistic",
+    "piecewise_poisson_workload",
+    "poisson_workload",
+    "policy_search",
+    "regime_shift_workload",
+    "run_fleet",
+    "sweep",
+    "trace_kill_rollout",
+    "trace_workload",
+    "vector",
+]

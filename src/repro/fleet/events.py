@@ -11,6 +11,13 @@ relies on:
 
 The engine is deliberately tiny: `kind` is a free-form string and `data` an
 arbitrary payload, so scheduler.py owns all semantics.
+
+Multi-scheduler simulations (the DAG engine: one `FleetScheduler` per
+stage, one global clock) share a single heap through `OwnedHeap` views:
+each view tags the events it pushes with its owner, so the driver popping
+from the shared heap can route every event back to the scheduler whose
+state machine it belongs to — barrier releases across stages then
+interleave in true global time order instead of per-stage order.
 """
 
 from __future__ import annotations
@@ -19,7 +26,7 @@ import dataclasses
 import heapq
 from typing import Any, Optional
 
-__all__ = ["Event", "EventHeap"]
+__all__ = ["Event", "EventHeap", "OwnedHeap"]
 
 
 @dataclasses.dataclass
@@ -29,6 +36,7 @@ class Event:
     kind: str
     data: Any = None
     cancelled: bool = False
+    owner: Any = None  # routing tag on shared heaps (see OwnedHeap)
 
     def cancel(self) -> None:
         self.cancelled = True
@@ -75,3 +83,45 @@ class EventHeap:
         while self._heap and self._heap[0][2].cancelled:
             heapq.heappop(self._heap)
         return self._heap[0][0] if self._heap else None
+
+
+class OwnedHeap:
+    """A scheduler's view of a shared `EventHeap`: pushes are tagged with
+    `owner` so the driver that pops from the shared heap knows which
+    scheduler's `handle()` each event belongs to.  Covers the heap surface
+    a driven `FleetScheduler` uses (push / cancel / truthiness / len) —
+    popping is the DRIVER's job on the underlying shared heap: a shared
+    heap holds every scheduler's events, so `pop` here raises rather than
+    hand one scheduler another's event (e.g. `FleetScheduler.run()` called
+    directly on a DAG stage scheduler would otherwise admit foreign-stage
+    jobs into the wrong pool and silently corrupt both schedulers).
+    """
+
+    def __init__(self, heap: EventHeap, owner: Any):
+        self.heap = heap
+        self.owner = owner
+
+    def push(self, time: float, kind: str, data: Any = None) -> Event:
+        ev = self.heap.push(time, kind, data)
+        ev.owner = self.owner
+        return ev
+
+    def cancel(self, ev: Event) -> None:
+        self.heap.cancel(ev)
+
+    def pop(self) -> Optional[Event]:
+        raise RuntimeError(
+            "this scheduler shares its event heap with others and cannot be "
+            "run standalone; drive it through the owning driver (e.g. "
+            "DagFleetScheduler.run), which pops the shared heap and routes "
+            "events by owner"
+        )
+
+    def peek_time(self) -> Optional[float]:
+        return self.heap.peek_time()
+
+    def __len__(self) -> int:
+        return len(self.heap)
+
+    def __bool__(self) -> bool:
+        return bool(self.heap)

@@ -20,7 +20,13 @@ import numpy as np
 from .scheduler import JobRecord
 from .workload import MachineClass
 
-__all__ = ["FleetStats", "compute_stats"]
+__all__ = [
+    "DagStats",
+    "FleetStats",
+    "compute_dag_stats",
+    "compute_stats",
+    "dag_critical_path_shares",
+]
 
 
 @dataclasses.dataclass
@@ -115,4 +121,144 @@ def compute_stats(
         n_preempted=int(sum(r.n_preempted for r in records)),
         class_utilization=class_util,
         class_job_share=class_share,
+    )
+
+
+# --------------------------------------------------------------------------
+# DAG jobs: per-stage metrics + critical-path attribution over records
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DagStats:
+    """Fleet metrics for multi-stage DAG jobs.
+
+    Job-level quantities span the whole DAG: sojourn is arrival → last sink
+    barrier, wait/service/cost are *summed over stages* (a DAG job queues
+    once per stage), and `critical_path_shares[name]` is the fraction of
+    E[sojourn] spent in stage `name` on the path that determined each job's
+    completion — the shares sum to 1 by construction and answer "which
+    stage's stragglers dominate E[T]".  `stage` holds one full `FleetStats`
+    per stage computed over that stage's own records and pool.
+    """
+
+    n_jobs: int
+    mean_sojourn: float  # E[arrival -> last sink barrier]
+    mean_wait: float  # E[Σ_s queueing delay]
+    mean_service: float  # E[Σ_s stage makespan]
+    mean_cost: float  # E[Σ_s C_s] (Definition 2 per stage)
+    throughput: float
+    p50_sojourn: float
+    p99_sojourn: float
+    p999_sojourn: float
+    sojourn_std_err: float
+    critical_path_shares: dict  # stage name -> share of E[sojourn]; sums to 1
+    stage: dict  # stage name -> FleetStats over that stage's records
+
+    def row(self) -> str:
+        shares = " ".join(
+            f"{k}={v:.2f}" for k, v in self.critical_path_shares.items()
+        )
+        return (
+            f"E[sojourn]={self.mean_sojourn:.3f} wait={self.mean_wait:.3f} "
+            f"E[C]={self.mean_cost:.3f} p99={self.p99_sojourn:.3f} "
+            f"crit[{shares}]"
+        )
+
+
+def dag_critical_path_shares(
+    stage_records: dict,
+    preds: dict,
+    sinks: Sequence[str],
+    arrivals: Sequence[float],
+) -> dict:
+    """Critical-path attribution from per-stage event records.
+
+    `stage_records[name]` lists one `JobRecord` per job in job-id order
+    (its `arrival` is the stage's barrier-release time); `preds[name]`
+    names the upstream stages (topological input order), `sinks` the
+    stages nothing depends on; `arrivals` are the DAG jobs' arrival times.
+    Walks each job backwards from the sink that finished last, crediting at
+    every step the predecessor whose barrier released the stage — the same
+    telescoping decomposition the vectorized engine computes in-program
+    (`repro.dag.rollout`), so Σ shares = 1 exactly.
+    """
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    n = arrivals.shape[0]
+    names = list(stage_records)
+    fin = {k: np.array([r.finish for r in v]) for k, v in stage_records.items()}
+    rel = {k: np.array([r.arrival for r in v]) for k, v in stage_records.items()}
+    for k in names:
+        if fin[k].shape[0] != n:
+            raise ValueError(f"stage {k!r} has {fin[k].shape[0]} records for {n} jobs")
+    sink_f = np.stack([fin[s] for s in sinks])
+    sojourn = sink_f.max(axis=0) - arrivals
+    winner = sink_f.argmax(axis=0)
+    crit = {k: np.zeros(n, bool) for k in names}
+    for j, s in enumerate(sinks):
+        crit[s] |= winner == j
+    attr = {}
+    for name in reversed(names):  # stage_records is in topological order
+        attr[name] = np.where(crit[name], fin[name] - rel[name], 0.0)
+        ps = preds.get(name, ())
+        if not ps:
+            continue
+        pred_f = np.stack([fin[p] for p in ps])
+        win = pred_f.argmax(axis=0)
+        for j, p in enumerate(ps):
+            crit[p] |= crit[name] & (win == j)
+    denom = max(float(sojourn.mean()), 1e-12)
+    return {name: float(attr[name].mean() / denom) for name in names}
+
+
+def compute_dag_stats(
+    stage_records: dict,
+    preds: dict,
+    sinks: Sequence[str],
+    arrivals: Sequence[float],
+    stage_capacity: dict,
+    stage_busy: dict,
+) -> DagStats:
+    """Aggregate per-stage records into DAG-level + per-stage statistics.
+
+    `stage_capacity` / `stage_busy` carry each stage pool's slot count and
+    accumulated busy copy-seconds (for per-stage utilization via
+    `compute_stats`).  Stage dicts must be in topological order.
+    """
+    if not stage_records:
+        raise ValueError("no stage records")
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    sink_fin = np.stack(
+        [np.array([r.finish for r in stage_records[s]]) for s in sinks]
+    )
+    soj = sink_fin.max(axis=0) - arrivals
+    wait = sum(
+        np.array([r.wait for r in v]) for v in stage_records.values()
+    )
+    svc = sum(
+        np.array([r.service for r in v]) for v in stage_records.values()
+    )
+    cost = sum(
+        np.array([r.cost for r in v]) for v in stage_records.values()
+    )
+    makespan = float(sink_fin.max() - arrivals.min())
+    stage = {
+        name: compute_stats(recs, stage_capacity[name], stage_busy[name])
+        for name, recs in stage_records.items()
+    }
+    return DagStats(
+        n_jobs=arrivals.shape[0],
+        mean_sojourn=float(soj.mean()),
+        mean_wait=float(wait.mean()),
+        mean_service=float(svc.mean()),
+        mean_cost=float(cost.mean()),
+        throughput=float(arrivals.shape[0] / max(makespan, 1e-12)),
+        p50_sojourn=float(np.percentile(soj, 50)),
+        p99_sojourn=float(np.percentile(soj, 99)),
+        p999_sojourn=float(np.percentile(soj, 99.9)),
+        sojourn_std_err=_batch_means_se(soj),
+        critical_path_shares=dag_critical_path_shares(
+            stage_records, preds, sinks, arrivals
+        ),
+        stage=stage,
     )

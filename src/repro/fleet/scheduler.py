@@ -213,6 +213,10 @@ class FleetScheduler:
             self.controller.bind_fleet(self.classes)
         # decorrelated from workload generators that may share `seed`
         self.rng = np.random.default_rng((0x5C4ED, seed))
+        # multi-scheduler drivers (the DAG engine) observe completions here
+        # and may swap `heap` for an OwnedHeap view of a shared heap before
+        # any event is pushed
+        self.job_done_hook = None  # Callable[[JobRecord], None]
         # run state
         self.heap = EventHeap()
         self.queue: list[Job] = []
@@ -242,21 +246,7 @@ class FleetScheduler:
             ev = self.heap.pop()
             if ev is None:
                 break
-            assert ev.time >= self.now - 1e-9, "event time went backwards"
-            self.now = ev.time
-            if ev.kind == "arrive":
-                if self.controller is not None:
-                    self.controller.observe_arrival(self.now)
-                self.queue.append(ev.data)
-                self._try_admit()
-            elif ev.kind == "copy_done":
-                self._on_copy_done(ev)
-                self._try_admit()
-            elif ev.kind == "fork":
-                self._on_fork(ev)
-                self._try_admit()  # a kill stage can net-free slots
-            else:  # pragma: no cover
-                raise RuntimeError(f"unknown event kind {ev.kind}")
+            self.handle(ev)
         if self.queue:  # every queued job must eventually fit
             stuck = [j.job_id for j in self.queue]
             raise RuntimeError(
@@ -265,6 +255,30 @@ class FleetScheduler:
             )
         self.records.sort(key=lambda r: r.job_id)
         return self.records
+
+    def handle(self, ev: Event) -> None:
+        """Advance this scheduler's state machine by one event.
+
+        Extracted from `run` so a multi-scheduler driver (the DAG engine's
+        per-stage pools on one shared heap) can interleave several
+        schedulers' events in global time order and route each popped event
+        to its owner.
+        """
+        assert ev.time >= self.now - 1e-9, "event time went backwards"
+        self.now = ev.time
+        if ev.kind == "arrive":
+            if self.controller is not None:
+                self.controller.observe_arrival(self.now)
+            self.queue.append(ev.data)
+            self._try_admit()
+        elif ev.kind == "copy_done":
+            self._on_copy_done(ev)
+            self._try_admit()
+        elif ev.kind == "fork":
+            self._on_fork(ev)
+            self._try_admit()  # a kill stage can net-free slots
+        else:  # pragma: no cover
+            raise RuntimeError(f"unknown event kind {ev.kind}")
 
     # ------------------------------------------------------------ admission
     def _next_queued(self) -> Optional[Job]:
@@ -506,21 +520,23 @@ class FleetScheduler:
             cls_name = "mixed"
         else:
             cls_name = self.classes[rjob.home_class].name
-        self.records.append(
-            JobRecord(
-                job_id=job.job_id,
-                arrival=job.arrival,
-                start=rjob.t_start,
-                finish=self.now,
-                n_tasks=job.n_tasks,
-                cost=rjob.cost / job.n_tasks,
-                n_replicas=rjob.n_replicas,
-                n_preempted=rjob.n_preempted,
-                policy=getattr(rjob, "policy_label", "?"),
-                machine_class=cls_name,
-            )
+        rec = JobRecord(
+            job_id=job.job_id,
+            arrival=job.arrival,
+            start=rjob.t_start,
+            finish=self.now,
+            n_tasks=job.n_tasks,
+            cost=rjob.cost / job.n_tasks,
+            n_replicas=rjob.n_replicas,
+            n_preempted=rjob.n_preempted,
+            policy=getattr(rjob, "policy_label", "?"),
+            machine_class=cls_name,
         )
+        self.records.append(rec)
         if self.controller is not None:
             self.controller.record_job_complete(
                 n_tasks=job.n_tasks, machine_class=cls_name
             )
+        if self.job_done_hook is not None:
+            # barrier hook: the DAG driver releases successor stages here
+            self.job_done_hook(rec)

@@ -76,6 +76,10 @@ from .workload import MachineClass
 
 __all__ = [
     "VectorFleetResult",
+    "as_quantile_source",
+    "batched_queue",
+    "cell_bucket",
+    "emp_quantile",
     "fleet_rollout",
     "fork_draws",
     "frontier",
@@ -415,12 +419,51 @@ def fleet_rollout(
 # --------------------------------------------------------------------------
 
 
-def _emp_quantile(xs, u):
+def emp_quantile(xs, u):
     """Inverse-transform gather through the sorted empirical sample
     (type-1 inverse, identical to `core.distributions.Empirical.quantile`)."""
     m = xs.shape[0]
     idx = jnp.clip(jnp.ceil(u * m).astype(jnp.int32) - 1, 0, m - 1)
     return xs[idx]
+
+
+def batched_queue(arrivals, services, speeds, kernel: bool = False):
+    """FIFO G/G/c queues over an arbitrary batch: the one cell engine every
+    stage of a composed rollout routes through.
+
+    `arrivals` / `services` are (..., n_jobs) with any shared leading batch
+    shape (trials, grid cells, both); each row is one independent queue with
+    `speeds.shape[0]` job slots.  Three realizations, selected exactly as in
+    the fused frontier: `kernel=True` flattens the batch into rows of ONE
+    Pallas `kernels.kw_queue` call; c = 1 is the closed-form Lindley
+    recursion (no sequential scan); c > 1 is the vmapped Kiefer–Wolfowitz
+    `lax.scan`.  Returns (starts, finishes, scaled_services, slots), each
+    with the input shape.  Rows must be sorted by arrival (FIFO order) —
+    stage-composed callers sort by barrier-release time first and invert
+    the permutation afterwards (`repro.dag.rollout`).
+    """
+    batch = arrivals.shape[:-1]
+    J = arrivals.shape[-1]
+    c = speeds.shape[0]
+    flat = lambda z: z.reshape((-1, J))  # noqa: E731
+    unflat = lambda z: z.reshape(batch + (J,))  # noqa: E731
+    if kernel:
+        # one Pallas call: every batch row tiled across the kernel grid
+        from repro.kernels.kw_queue import kw_queue as kw_queue_pallas
+
+        outs = kw_queue_pallas(flat(arrivals), flat(services), speeds)
+        return tuple(unflat(z) for z in outs)
+    if c == 1:
+        svc = services / speeds[0]
+        starts, fins = jax.vmap(lindley)(flat(arrivals), flat(svc))
+        return (
+            unflat(starts),
+            unflat(fins),
+            svc,
+            jnp.zeros(arrivals.shape, jnp.int32),
+        )
+    outs = jax.vmap(lambda a, t: kw_queue(a, t, speeds))(flat(arrivals), flat(services))
+    return tuple(unflat(z) for z in outs)
 
 
 def masked_single_fork(x_sorted, fresh, k, r, keep):
@@ -462,7 +505,7 @@ def fork_draws(key, quantile, shape, n: int, r_cap: int):
     """The common-random-number draw pair `masked_single_fork` consumes.
 
     `quantile` is any inverse-transform: an analytic distribution's
-    `.quantile` or the empirical gather `partial(_emp_quantile, xs)` — the
+    `.quantile` or the empirical gather `partial(emp_quantile, xs)` — the
     one hook through which both kinds of service distribution enter the
     fused engine.  Returns (x_sorted: shape+(n,), fresh: shape+(n, r_cap)).
     """
@@ -507,7 +550,7 @@ def _frontier_jit(
     equal size.
     """
     ka, kf = jax.random.split(key)
-    quantile = dist.quantile if dist is not None else partial(_emp_quantile, xs)
+    quantile = dist.quantile if dist is not None else partial(emp_quantile, xs)
     x_sorted, fresh = fork_draws(kf, quantile, (m_trials, n_jobs), n, r_cap)
     expo_cum = jnp.cumsum(jax.random.exponential(ka, (m_trials, n_jobs)), axis=1)
 
@@ -517,26 +560,8 @@ def _frontier_jit(
 
     arrivals, T, C = jax.vmap(tc)(ks, rs, keeps, lams)  # each (cells, m, J)
 
-    cells = ks.shape[0]
     c = speeds.shape[0]
-    if kernel:
-        # one Pallas call: (trials × grid-cells) rows tiled across its grid
-        from repro.kernels.kw_queue import kw_queue as kw_queue_pallas
-
-        flat = lambda z: z.reshape(cells * m_trials, n_jobs)  # noqa: E731
-        outs = kw_queue_pallas(flat(arrivals), flat(T), speeds)
-        starts, fins, svc, slots = (
-            z.reshape(cells, m_trials, n_jobs) for z in outs
-        )
-    elif c == 1:
-        # closed-form Lindley: no sequential scan anywhere in the program
-        svc = T / speeds[0]
-        starts, fins = jax.vmap(jax.vmap(lindley))(arrivals, svc)
-        slots = jnp.zeros(T.shape, jnp.int32)
-    else:
-        starts, fins, svc, slots = jax.vmap(
-            jax.vmap(lambda a, t: kw_queue(a, t, speeds))
-        )(arrivals, T)
+    starts, fins, svc, slots = batched_queue(arrivals, T, speeds, kernel=kernel)
 
     n_classes = class_slots.shape[0]
 
@@ -595,7 +620,7 @@ def _frontier_jit(
     return jax.vmap(cellstats)(arrivals, starts, fins, slots, svc, T, C, lams)
 
 
-def _as_quantile_source(dist_or_samples):
+def as_quantile_source(dist_or_samples):
     """Normalize the frontier's first argument: (static_dist | None, xs).
 
     Hashable analytic distributions stay static (their quantile transform
@@ -613,7 +638,7 @@ def _as_quantile_source(dist_or_samples):
     return None, xs
 
 
-def _cell_bucket(n_cells: int) -> int:
+def cell_bucket(n_cells: int) -> int:
     """Next power-of-two bucket (>= 8): grids of any size up to the bucket
     share one compilation."""
     b = 8
@@ -644,7 +669,7 @@ def _eval_cells(
         raise ValueError("arrival rate lam must be > 0")
     if key is None:
         key = jax.random.PRNGKey(0)
-    dist, xs = _as_quantile_source(dist_or_samples)
+    dist, xs = as_quantile_source(dist_or_samples)
     slot = _slot_arrays(n, c, classes)
     speeds, slot_class, class_slots, names = slot if slot is not None else _c1_slot_arrays(n)
 
@@ -655,7 +680,7 @@ def _eval_cells(
         raise ValueError(f"r_cap={r_cap} < r_max+1={r_max + 1}")
 
     n_cells = len(cell_policies)
-    n_padded = _cell_bucket(n_cells) if pad_cells else n_cells
+    n_padded = cell_bucket(n_cells) if pad_cells else n_cells
     ks = [n - num_stragglers(n, pol.p) for pol in cell_policies]
     rs = [pol.r for pol in cell_policies]
     keeps = [pol.keep for pol in cell_policies]

@@ -110,6 +110,7 @@ class FleetHedgedServer:
         seed: int = 0,
         classes=None,
         placement: str = "pooled",
+        dag=None,
     ):
         """`capacity` is a single homogeneous replica pool; alternatively
         pass `classes` (a sequence of `repro.fleet.MachineClass`, e.g. a
@@ -124,9 +125,44 @@ class FleetHedgedServer:
         arrivals and replica latencies and re-plans (p, r, keep|kill)
         through the vectorized KW policy search so hedging backs off
         before it saturates the replica pool; `adapt_mode="online"` keeps
-        the single-batch learner (paper §5.2)."""
+        the single-batch learner (paper §5.2).
+
+        `dag` switches the backend to multi-stage pipeline serving
+        (`repro.dag`): each batch is one DAG job traversing e.g. a prefill
+        stage pool then a decode stage pool, with the stages' own task
+        counts, latency distributions, per-stage hedging policies, and a
+        barrier between stages; `capacity` / `latency_dist` / `adapt` are
+        then carried by the DAG's stage specs and must be omitted."""
         from repro.fleet import FleetConfig, FleetSim
 
+        if dag is not None:
+            from repro.dag import DagFleetConfig, DagFleetSim
+
+            if capacity is not None or classes is not None or latency_dist is not None:
+                raise ValueError(
+                    "dag mode: capacity/classes/latency_dist come from the "
+                    "DAG's stage specs; pass only the dag"
+                )
+            # the remaining single-pool knobs are owned by the stage specs
+            # too — reject them instead of silently dropping them
+            if (policy is not None or preempt_replicas is not None
+                    or placement != "pooled" or adapt_mode != "fleet"
+                    or adapt is not True):
+                raise ValueError(
+                    "dag mode: per-stage policies live on the DAG's stage "
+                    "specs and adaptation/placement are not supported; leave "
+                    "policy/adapt/adapt_mode/preempt_replicas/placement at "
+                    "their defaults"
+                )
+            if serve_fn is None:
+                raise ValueError("serve_fn is required")
+            self.dag = dag
+            self.capacity = sum(s.c * s.n_tasks for s in dag.stages)
+            self.latency_dist = None
+            self.serve_fn = serve_fn
+            self.sim = DagFleetSim(DagFleetConfig(dag=dag, seed=seed))
+            return
+        self.dag = None
         if capacity is None and classes is None:
             raise ValueError("need either capacity or classes")
         if latency_dist is None or serve_fn is None:
@@ -155,7 +191,7 @@ class FleetHedgedServer:
     @property
     def controller(self):
         """The policy controller learning across batches (None if fixed)."""
-        return self.sim.controller
+        return None if self.dag is not None else self.sim.controller
 
     def serve_stream(
         self,
@@ -173,6 +209,22 @@ class FleetHedgedServer:
             arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(batches)))
         if len(arrivals) != len(batches):
             raise ValueError("need one arrival time per batch")
+        if self.dag is not None:
+            # pipeline mode: each batch is one DAG job through the stage
+            # pools (task counts and latency draws come from the specs);
+            # values still computed exactly once per request
+            report = self.sim.run(arrivals)
+            outcomes = [
+                BatchOutcome(
+                    values=[self.serve_fn(r) for r in batch],
+                    arrival=rec.arrival,
+                    start=min(s.start for s in rec.stages.values()),
+                    finish=rec.finish,
+                    cost=rec.cost,
+                )
+                for rec, batch in zip(report.jobs, batches)
+            ]
+            return outcomes, report.stats
         jobs = [
             Job(job_id=i, arrival=float(arrivals[i]), n_tasks=len(b), dist=self.latency_dist)
             for i, b in enumerate(batches)
