@@ -45,6 +45,7 @@ import jax
 import numpy as np
 
 from repro.core import ShiftedExp, SingleForkPolicy
+from repro.obs import trace as obs_trace
 from repro.fleet import (
     REGIME_SHIFT,
     FleetConfig,
@@ -249,6 +250,88 @@ def run():
     rows.append(
         ("fleet_frontier_fused", fused_s * 1e6 / len(fused_rows),
          f"speedup={fusion_speedup:.1f}x;max_dev={frontier_dev:.2f}sigma")
+    )
+
+    # -- observability overhead: instrumented fused frontier vs disabled ---
+    # enabled = process-wide recorder on (dispatch span with
+    # block_until_ready + counters); disabled = NullRecorder.  Same grid,
+    # same tail mode — this isolates the instrumentation itself, which is
+    # the recorder protocol's contract: turning telemetry on must not
+    # distort what it measures.  Gate at ≤5%.
+    OBS_REPS = 3
+    obs_ratio = float("inf")
+    for attempt in range(3):
+        t0 = time.perf_counter()
+        for _ in range(OBS_REPS):
+            vector.frontier(
+                DIST, FRONTIER_POLICIES, FRONTIER_LAMS, N_TASKS, N_JOBS,
+                m_trials=M_TRIALS, key=fkey,
+            )
+        attempt_off_s = time.perf_counter() - t0
+        obs_trace.enable()
+        try:
+            t0 = time.perf_counter()
+            for _ in range(OBS_REPS):
+                vector.frontier(
+                    DIST, FRONTIER_POLICIES, FRONTIER_LAMS, N_TASKS, N_JOBS,
+                    m_trials=M_TRIALS, key=fkey,
+                )
+            attempt_on_s = time.perf_counter() - t0
+        finally:
+            obs_trace.disable()
+        if attempt_on_s / max(attempt_off_s, 1e-9) < obs_ratio:
+            obs_ratio = attempt_on_s / max(attempt_off_s, 1e-9)
+            obs_off_s, obs_on_s = attempt_off_s, attempt_on_s
+        if obs_ratio <= 1.05:
+            break
+    if not record_gate(
+        "obs_frontier_overhead", obs_ratio <= 1.05,
+        f"enabled/disabled={obs_ratio:.3f} (ceiling 1.05; "
+        f"on={obs_on_s:.2f}s off={obs_off_s:.2f}s x{OBS_REPS})",
+    ):
+        failures.append(
+            f"instrumented fused frontier costs {obs_ratio:.2f}x the disabled "
+            f"path (ceiling 1.05x; on={obs_on_s:.2f}s off={obs_off_s:.2f}s)"
+        )
+    rows.append(
+        ("fleet_obs_overhead", obs_on_s * 1e6 / (OBS_REPS * len(fused_rows)),
+         f"enabled/disabled={obs_ratio:.3f}")
+    )
+
+    # the device-histogram tail lane, reported but NOT gated on CPU: the
+    # γ-bucket accumulation trades extra in-program compute (a scatter-add
+    # over every trial sojourn/cost) for a fixed-size off-device payload —
+    # (2·n_bins+6) scalars/cell instead of m_trials×n_jobs samples.  On
+    # CPU there is no transfer to save, so the lane typically costs
+    # ~1.4-1.7×; the payload shrink is the accelerator story.
+    vector.frontier(
+        DIST, FRONTIER_POLICIES, FRONTIER_LAMS, N_TASKS, N_JOBS,
+        m_trials=M_TRIALS, key=fkey, tail="hist",
+    )  # warm the hist-mode compilation
+    t0 = time.perf_counter()
+    for _ in range(OBS_REPS):
+        hist_rows = vector.frontier(
+            DIST, FRONTIER_POLICIES, FRONTIER_LAMS, N_TASKS, N_JOBS,
+            m_trials=M_TRIALS, key=fkey, tail="hist",
+        )
+    hist_s = time.perf_counter() - t0
+    # sketch tails must stay within the rel-acc contract of the exact keys
+    hist_dev = max(
+        abs(h["p99"] - f["p99"]) / max(f["p99"], 1e-12)
+        for h, f in zip(hist_rows, fused_rows)
+    )
+    if not record_gate(
+        "hist_tail_agreement", hist_dev <= 0.15,
+        f"max_p99_rel_dev={hist_dev:.3f} over {len(hist_rows)} cells "
+        f"(hist/exact wall={hist_s / max(obs_off_s, 1e-9):.2f})",
+    ):
+        failures.append(
+            f"hist-tail frontier p99 off by {hist_dev:.1%} from the exact keys"
+        )
+    rows.append(
+        ("fleet_frontier_hist_tail", hist_s * 1e6 / (OBS_REPS * len(hist_rows)),
+         f"hist/exact={hist_s / max(obs_off_s, 1e-9):.2f};"
+         f"max_p99_rel_dev={hist_dev:.3f}")
     )
 
     # -- adaptive re-plan latency: padded fused search vs PR-3 unpadded ----
@@ -549,6 +632,18 @@ def run():
                 candidate_sizes=list(replan_sizes),
                 repeats=2,
             ),
+            obs_overhead=dict(
+                enabled_s=obs_on_s,
+                disabled_s=obs_off_s,
+                ratio=obs_ratio,
+                reps=OBS_REPS,
+                ceiling=1.05,
+                hist_tail=dict(
+                    hist_s=hist_s,
+                    ratio_vs_exact=hist_s / max(obs_off_s, 1e-9),
+                    max_p99_rel_dev=hist_dev,
+                ),
+            ),
             timing=dict(event_s=event_s, vector_s=vec_s, speedup=speedup),
             agreement=dict(
                 lam=lam,
@@ -584,15 +679,12 @@ def run():
                 adaptive_p99=adaptive_rep.stats.p99_sojourn,
                 reoptimizations=len(ctrl.history),
                 drift_events=ctrl.n_drifts,
-                decisions=[
-                    dict(
-                        trigger=d.trigger,
-                        policy=d.policy.label(),
-                        lam_hat=d.lam_hat,
-                        rho=d.rho,
-                    )
-                    for d in ctrl.history
-                ],
+                # the structured decision log (repro.obs.decisions): every
+                # re-plan / drift flush / exploration / veto with the state
+                # that justified it, in sim-time order
+                decisions=ctrl.decisions.timeline(),
+                n_vetoes=ctrl.decisions.n_vetoes,
+                n_explorations=ctrl.decisions.n_explorations,
             ),
             heterogeneity=dict(
                 lam=HET_LAM,

@@ -81,6 +81,23 @@ def run():
     ):
         kw_failure = f"kw_queue kernel disagrees with the scan oracle: {err:.2e}"
 
+    # kernel_profile lane: compile time, steady-state wall, HLO bytes-by-op
+    # and the executable's memory footprint for the SAME kw_queue batch —
+    # the obs-side view of the kernel the frontier dispatches
+    from repro.obs import kernel_profile
+
+    prof = kernel_profile(
+        lambda a, s, sp: ops.kw_queue(a, s, sp)[1],
+        kw_arr, kw_svc, kw_speeds,
+        name="kw_queue", repeats=3,
+    )
+    rows.append(
+        ("kw_queue_profile", prof["wall_s"] * 1e6,
+         f"compile_s={prof['compile_s']:.2f};"
+         f"hlo_bytes={prof['hlo_bytes_total']};"
+         f"temp_bytes={prof.get('temp_bytes', 'n/a')}")
+    )
+
     # end-to-end Algorithm 1 throughput (m=1000 bootstrap replicates)
     rng = np.random.default_rng(0)
     trace = rng.exponential(100, 1026) + 50

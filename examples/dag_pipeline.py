@@ -130,12 +130,15 @@ print(
 )
 
 # -- 4. event-engine cross-check on the chosen vector ------------------------
+# obs=True turns the full trace on for the event run: one Perfetto process
+# per stage (queue/service spans per job), barrier-release markers, and a
+# dag.jobs row spanning each job arrival -> sink barrier
 n_ev = 200 if QUICK else 500
 res = dag_rollout(
     dag, lam=LAM, n_jobs=n_ev, m_trials=M_TRIALS, policies=joint["policies"],
     key=jax.random.PRNGKey(1),
 )
-rep = DagFleetSim(DagFleetConfig(dag, policies=joint["policies"])).run(
+rep = DagFleetSim(DagFleetConfig(dag, policies=joint["policies"], obs=True)).run(
     poisson_arrivals(n_ev, LAM, seed=2)
 )
 sigma = max(float(np.hypot(res.sojourn_std_err, rep.stats.sojourn_std_err)), 1e-12)
@@ -149,3 +152,20 @@ print(
 )
 assert dev < 5.0, "fused rollout must agree with the stage-aware event engine"
 assert abs(sum(rep.stats.critical_path_shares.values()) - 1.0) < 1e-9
+
+# -- 5. export the event run's trace for Perfetto ----------------------------
+import pathlib
+
+from repro.obs import write_chrome_trace
+
+trace_path = pathlib.Path(__file__).resolve().parent.parent / (
+    "benchmarks/results/dag_pipeline_trace.json"
+)
+trace_path.parent.mkdir(parents=True, exist_ok=True)
+write_chrome_trace(trace_path, rep.trace)
+dag_spans = rep.trace.spans_named("dag_job")
+assert len(dag_spans) == n_ev, "one dag_job span per job"
+print(
+    f"wrote {len(rep.trace.spans)} spans ({len(dag_spans)} dag_job rows, "
+    f"per-stage queue/service spans, barrier markers) to {trace_path}"
+)

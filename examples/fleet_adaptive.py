@@ -21,10 +21,12 @@ off to ~baseline on its own, while the single-job view (which never sees
 ρ) would keep forking.
 """
 
+import pathlib
 import sys
 import time
 
 from repro.fleet import REGIME_SHIFT, FleetConfig, FleetSim
+from repro.obs import write_chrome_trace
 
 QUICK = "--quick" in sys.argv
 SCEN = REGIME_SHIFT  # shared with bench_fleet's gated frontier
@@ -56,9 +58,12 @@ for pol in grid:
 
 print(f"\nbest pre-shift fixed policy: {best_fixed.label()}")
 
-# -- the adaptive run ------------------------------------------------------
+# -- the adaptive run (with the full observability stack on) ---------------
+# obs=True gives this sim a private trace recorder: per-job queue/service
+# spans from the scheduler, controller decision markers, event counters —
+# exported below as Chrome trace-event JSON (open in https://ui.perfetto.dev)
 t0 = time.time()
-sim = FleetSim(FleetConfig(capacity=CAPACITY, adapt=True, seed=SEED))
+sim = FleetSim(FleetConfig(capacity=CAPACITY, adapt=True, seed=SEED, obs=True))
 rep = sim.run(jobs)
 ctrl = rep.controller
 print(
@@ -67,13 +72,18 @@ print(
     f"{len(ctrl.history)} re-optimizations, {ctrl.n_drifts} drift events)\n"
 )
 
-print("controller decision timeline (one row per re-optimization):")
-for d in ctrl.history:
-    flag = " <- drift" if d.trigger == "drift" else ""
-    print(
-        f"  lam_hat={d.lam_hat:5.2f}  rho_hat={d.rho:4.2f}  "
-        f"-> {d.policy.label():24s}{flag}"
-    )
+print("controller decision timeline (replans, drift flushes, vetoes):")
+print(ctrl.decisions.render())
+
+trace_path = pathlib.Path(__file__).resolve().parent.parent / (
+    "benchmarks/results/fleet_adaptive_trace.json"
+)
+trace_path.parent.mkdir(parents=True, exist_ok=True)
+write_chrome_trace(trace_path, rep.trace)
+print(
+    f"\nwrote {len(rep.trace.spans)} spans / {len(rep.trace.instants)} markers "
+    f"to {trace_path} (load in Perfetto / chrome://tracing)"
+)
 
 pre_picks = {d.policy.label() for d in ctrl.history if d.lam_hat < 2 * LAM_A}
 post_picks = {d.policy.label() for d in ctrl.history if d.lam_hat > 0.7 * LAM_B}

@@ -95,10 +95,14 @@ class DagFleetScheduler:
         fork_overhead: float = 0.0,
         placement: str = "aligned",
         seed: int = 0,
+        recorder=None,  # repro.obs Recorder; None = the process-wide one
     ):
+        from repro.obs import trace as _trace
+
         self.dag = dag
         self.policies = dag.validate_policy_vector(policies)
         self.heap = EventHeap()
+        self._recorder = recorder
         self.stage_scheds: list[FleetScheduler] = []
         for i, spec in enumerate(dag.stages):
             sched = FleetScheduler(
@@ -109,6 +113,9 @@ class DagFleetScheduler:
                 placement=placement,
                 # decorrelate stage streams while staying reproducible
                 seed=seed * 9973 + i,
+                recorder=recorder,
+                # each stage gets its own Perfetto process row
+                obs_pid=_trace.PID_DAG_BASE + i,
             )
             # swap in the shared-heap view BEFORE any event exists, and
             # observe completions for barrier releases
@@ -117,6 +124,11 @@ class DagFleetScheduler:
             self.stage_scheds.append(sched)
         self._done: list[set] = []
         self.stage_records: dict = {name: {} for name in dag.names}
+
+    def _rec(self):
+        from repro.obs import trace as _trace
+
+        return self._recorder if self._recorder is not None else _trace.get_recorder()
 
     # ------------------------------------------------------------- barriers
     def _release(self, stage_idx: int, job_id: int, t: float) -> None:
@@ -140,7 +152,17 @@ class DagFleetScheduler:
             if all(self.dag.index[d] in done for d in self.dag.preds[succ]):
                 # this stage finished last among the preds, so the release
                 # instant record.finish IS the barrier max
-                self._release(self.dag.index[succ], record.job_id, record.finish)
+                succ_idx = self.dag.index[succ]
+                rec = self._rec()
+                if rec.enabled:
+                    from repro.obs import trace as _trace
+
+                    rec.instant(
+                        "barrier_release", "dag", record.finish,
+                        pid=_trace.PID_DAG_BASE + succ_idx, tid=record.job_id,
+                        args={"from": name, "to": succ},
+                    )
+                self._release(succ_idx, record.job_id, record.finish)
 
     # ------------------------------------------------------------------ run
     def run(self, arrivals: Sequence[float]) -> list[DagJobRecord]:
@@ -148,6 +170,15 @@ class DagFleetScheduler:
         n = len(arrivals)
         if n == 0:
             raise ValueError("need at least one DAG job arrival")
+        rec = self._rec()
+        if rec.enabled:
+            from repro.obs import trace as _trace
+
+            self.heap.recorder = rec
+            for i, spec in enumerate(self.dag.stages):
+                rec.name_process(_trace.PID_DAG_BASE + i, f"stage:{spec.name}")
+            self._dag_pid = _trace.PID_DAG_BASE + len(self.dag.stages)
+            rec.name_process(self._dag_pid, "dag.jobs")
         self._done = [set() for _ in range(n)]
         for j, t in enumerate(arrivals):
             for src in self.dag.sources:
@@ -172,15 +203,20 @@ class DagFleetScheduler:
             stages = {
                 name: self.stage_records[name][j] for name in self.dag.names
             }
-            out.append(
-                DagJobRecord(
-                    job_id=j,
-                    arrival=t,
-                    finish=max(stages[s].finish for s in self.dag.sinks),
-                    cost=sum(r.cost for r in stages.values()),
-                    stages=stages,
-                )
+            djr = DagJobRecord(
+                job_id=j,
+                arrival=t,
+                finish=max(stages[s].finish for s in self.dag.sinks),
+                cost=sum(r.cost for r in stages.values()),
+                stages=stages,
             )
+            if rec.enabled:
+                # top-level DAG span: the per-stage queue/service spans of
+                # the same tid nest inside it on the stage rows
+                rec.span("dag_job", "dag", djr.arrival, djr.sojourn,
+                         pid=self._dag_pid, tid=j,
+                         args={"cost": round(djr.cost, 6)})
+            out.append(djr)
         return out
 
 
@@ -192,6 +228,9 @@ class DagFleetConfig:
     fork_overhead: float = 0.0
     placement: str = "aligned"  # the KW fast-path oracle; "pooled" also legal
     seed: int = 0
+    # observability flag, same convention as FleetConfig.obs (None/False =
+    # process-wide recorder, True = fresh private Recorder, or a Recorder)
+    obs: object = None
 
 
 @dataclasses.dataclass
@@ -199,6 +238,8 @@ class DagFleetReport:
     jobs: list[DagJobRecord]
     stage_records: dict  # stage name -> [JobRecord] in job order
     stats: DagStats
+    # the repro.obs Recorder that captured the run (NullRecorder if disabled)
+    trace: Optional[object] = None
 
     @property
     def critical_path_shares(self) -> dict:
@@ -220,7 +261,10 @@ class DagFleetSim:
         self.config = config
 
     def run(self, arrivals: Sequence[float]) -> DagFleetReport:
+        from repro.obs import trace as _trace
+
         cfg = self.config
+        recorder = _trace.resolve_recorder(cfg.obs)
         sched = DagFleetScheduler(
             cfg.dag,
             policies=cfg.policies,
@@ -228,6 +272,7 @@ class DagFleetSim:
             fork_overhead=cfg.fork_overhead,
             placement=cfg.placement,
             seed=cfg.seed,
+            recorder=recorder,
         )
         jobs = sched.run(arrivals)
         stage_records = {
@@ -248,7 +293,10 @@ class DagFleetSim:
                 for s, sub in zip(cfg.dag.stages, sched.stage_scheds)
             },
         )
-        return DagFleetReport(jobs=jobs, stage_records=stage_records, stats=stats)
+        return DagFleetReport(
+            jobs=jobs, stage_records=stage_records, stats=stats,
+            trace=recorder if recorder is not None else _trace.get_recorder(),
+        )
 
 
 def run_dag_fleet(arrivals: Sequence[float], config: DagFleetConfig) -> DagFleetReport:

@@ -181,13 +181,17 @@ def _critical_attribution(arrivals, readys, finishes, plan, sinks):
 
 @partial(
     jax.jit,
-    static_argnames=("plan", "sinks", "n_jobs", "m_trials", "r_caps", "kernel"),
+    static_argnames=("plan", "sinks", "n_jobs", "m_trials", "r_caps", "kernel",
+                     "hist"),
 )
 def _dag_stats_jit(key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs,
-                   m_trials, r_caps, kernel):
+                   m_trials, r_caps, kernel, hist=None):
     """Grid evaluation: one stacked stats row per cell + job sojourns for
     host-side percentiles (XLA CPU sort is ~10x slower than np.partition,
-    same split as the fleet frontier)."""
+    same split as the fleet frontier).  With `hist` (a static
+    `repro.obs.HistSpec`) the raw sojourns stay on device and fixed-size
+    γ-bucket sojourn + cost bincounts ship instead — the device-side
+    observability path, same layout as the fleet `_frontier_jit`."""
     arrivals, readys, starts, finishes, Ts, Cs = _compose(
         key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs, m_trials,
         r_caps, kernel,
@@ -224,7 +228,17 @@ def _dag_stats_jit(key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs,
     base = jnp.stack([mean_soj, mean(wait_total), mean(service_total),
                       mean(cost), se, rho], axis=1)
     stats = jnp.concatenate([base] + blocks, axis=1)
-    return stats, sojourn.reshape(sojourn.shape[0], -1)
+    if hist is None:
+        return stats, sojourn.reshape(sojourn.shape[0], -1)
+    from repro.obs.device import device_histogram
+
+    def cell_hists(soj_cell, cost_cell):
+        s_counts, s_min, s_max, s_sum = device_histogram(soj_cell, hist)
+        c_counts, c_min, c_max, c_sum = device_histogram(cost_cell, hist)
+        return (s_counts, jnp.stack([s_min, s_max, s_sum]),
+                c_counts, jnp.stack([c_min, c_max, c_sum]))
+
+    return stats, jax.vmap(cell_hists)(sojourn, cost)
 
 
 @partial(
@@ -288,9 +302,13 @@ def _eval_dag_cells(
     kernel: bool,
     r_caps,
     pad_cells: bool,
+    tail="exact",
 ):
     """Shared engine behind `dag_frontier` (and the joint searches): one
-    stats dict per (policy-vector, λ) cell from a single fused dispatch."""
+    stats dict per (policy-vector, λ) cell from a single fused dispatch.
+    `tail` follows the fleet `_eval_cells` convention: "exact" ships the
+    sojourn matrices, "hist" / a `repro.obs.HistSpec` ships in-program
+    bincounts and adds cost_p50/cost_p99/cost_p999 to every row."""
     if not cell_vectors:
         raise ValueError("need at least one candidate policy vector")
     cell_vectors = [dag.validate_policy_vector(v) for v in cell_vectors]
@@ -314,13 +332,36 @@ def _eval_dag_cells(
     rs = np.array([[pol.r for pol in vec] for vec in vecs], np.int32)
     keeps = np.array([[pol.keep for pol in vec] for vec in vecs])
 
-    stats, soj = _dag_stats_jit(
+    from repro.obs.device import HistSpec, DEFAULT_HIST, sketch_from_device
+
+    if tail == "exact":
+        hist = None
+    elif tail == "hist":
+        hist = DEFAULT_HIST
+    elif isinstance(tail, HistSpec):
+        hist = tail
+    else:
+        raise ValueError(f'tail must be "exact", "hist", or a HistSpec, got {tail!r}')
+
+    stats, payload = _dag_stats_jit(
         key, xss, jnp.asarray(ks), jnp.asarray(rs), jnp.asarray(keeps),
         jnp.asarray(lams), plan, sinks, n_jobs, m_trials, r_caps, kernel,
+        hist=hist,
     )
     stats = np.asarray(stats)[:n_cells]
-    soj = np.asarray(soj)[:n_cells]
-    pcts = np.percentile(soj, (50.0, 99.0, 99.9), axis=1)
+    if hist is None:
+        soj = np.asarray(payload)[:n_cells]
+        pcts = np.percentile(soj, (50.0, 99.0, 99.9), axis=1)
+        cost_pcts = None
+    else:
+        s_counts, s_agg, c_counts, c_agg = (np.asarray(p)[:n_cells] for p in payload)
+        pcts = np.empty((3, n_cells))
+        cost_pcts = np.empty((3, n_cells))
+        for i in range(n_cells):
+            sk = sketch_from_device(s_counts[i], *s_agg[i], spec=hist)
+            pcts[:, i] = sk.quantiles((0.5, 0.99, 0.999))
+            ck = sketch_from_device(c_counts[i], *c_agg[i], spec=hist)
+            cost_pcts[:, i] = ck.quantiles((0.5, 0.99, 0.999))
     rows = []
     nk = len(_DAG_JIT_KEYS)
     nsk = len(_DAG_STAGE_KEYS)
@@ -332,6 +373,10 @@ def _eval_dag_cells(
             **dict(zip(_DAG_JIT_KEYS, map(float, stats[i, :nk]))),
         )
         row["p50"], row["p99"], row["p999"] = (float(pcts[j, i]) for j in range(3))
+        if cost_pcts is not None:
+            row["cost_p50"], row["cost_p99"], row["cost_p999"] = (
+                float(cost_pcts[j, i]) for j in range(3)
+            )
         for s, spec in enumerate(dag.stages):
             off = nk + s * nsk
             for j, k in enumerate(_DAG_STAGE_KEYS):
@@ -350,6 +395,7 @@ def dag_frontier(
     kernel: bool = False,
     r_caps=None,
     pad_cells: bool = True,
+    tail="exact",
 ) -> list[dict]:
     """The whole (per-stage-policy-vector × λ) cross-product as ONE fused
     device program over shared CRN draws.
@@ -377,7 +423,7 @@ def dag_frontier(
     cell_lams = lams * len(policy_vectors)
     return _eval_dag_cells(
         dag, cell_vectors, cell_lams, n_jobs, m_trials, key, kernel, r_caps,
-        pad_cells,
+        pad_cells, tail=tail,
     )
 
 

@@ -34,6 +34,7 @@ from .metrics import (  # noqa: F401
     compute_dag_stats,
     compute_stats,
     dag_critical_path_shares,
+    tail_quantiles,
 )
 from .fleet import FleetConfig, FleetReport, FleetSim, run_fleet  # noqa: F401
 from . import vector  # noqa: F401
@@ -79,6 +80,7 @@ __all__ = [
     "regime_shift_workload",
     "run_fleet",
     "sweep",
+    "tail_quantiles",
     "trace_kill_rollout",
     "trace_workload",
     "vector",

@@ -89,6 +89,8 @@ class PolicyDecision:
     n_samples: int
     explored: bool = False  # ε-greedy perturbation applied on top
     class_policies: Optional[dict] = None
+    n_vetoed: int = 0  # candidates the ρ-guard rejected this re-plan
+    t: float = float("nan")  # sim time of the decision
 
 
 @dataclasses.dataclass
@@ -138,6 +140,14 @@ class FleetPolicyController:
         self.history: list[PolicyDecision] = []
         self.n_drifts = 0
         self.rho_hat: Optional[float] = None
+        # structured decision log (repro.obs): every re-plan / drift flush /
+        # exploration / ρ-veto lands here and — when tracing is enabled —
+        # as a marker on the controller's Perfetto row
+        from repro.obs.decisions import DecisionLog
+
+        self.decisions = DecisionLog()
+        self._now = 0.0  # latest sim time seen (arrivals / completions)
+        self.last_ks_stat = float("nan")  # most recent drift-test statistic
 
     # -------------------------------------------------- provider interface
     def bind_fleet(self, classes: Sequence[MachineClass]) -> None:
@@ -145,8 +155,14 @@ class FleetPolicyController:
         self.classes = tuple(classes)
         self.capacity = sum(k.slots for k in self.classes)
 
+    def bind_recorder(self, recorder) -> None:
+        """Pin the decision log's trace sink (None keeps the process-wide
+        recorder resolution)."""
+        self.decisions.recorder = recorder
+
     def observe_arrival(self, t: float) -> None:
         self._arrivals.append(float(t))
+        self._now = max(self._now, float(t))
 
     def record_task_time(self, seconds: float, machine_class: Optional[str] = None) -> None:
         """Reservoir-sample one completed task's base execution time."""
@@ -161,12 +177,17 @@ class FleetPolicyController:
                 self._samples[j] = x
 
     def record_job_complete(
-        self, n_tasks: Optional[int] = None, machine_class: Optional[str] = None
+        self,
+        n_tasks: Optional[int] = None,
+        machine_class: Optional[str] = None,
+        now: Optional[float] = None,
     ) -> None:
         if n_tasks is not None:
             self._job_sizes.append(int(n_tasks))
         if machine_class is not None:
             self._class_jobs.append(machine_class)
+        if now is not None:
+            self._now = max(self._now, float(now))
         self._jobs += 1
         if self._drift_detected():
             # regime shift: the pre-shift mass in the reservoir is no longer
@@ -175,6 +196,13 @@ class FleetPolicyController:
             self._seen = len(self._samples)
             self.n_drifts += 1
             self._last_drift_job = self._jobs
+            from repro.obs.decisions import DecisionEvent, KIND_DRIFT
+
+            self.decisions.log(DecisionEvent(
+                t=self._now, kind=KIND_DRIFT, label="reservoir flushed",
+                trigger="ks", ks_stat=self.last_ks_stat,
+                n_samples=len(self._samples),
+            ))
             self._reoptimize("drift")
         elif (
             self._jobs % self.reoptimize_every == 0
@@ -229,6 +257,7 @@ class FleetPolicyController:
             return False
         n = len(self._samples)
         d = ks_statistic(self._recent, self._samples)
+        self.last_ks_stat = d  # surfaced in the structured decision log
         return d > self.drift_threshold * np.sqrt((m + n) / (m * n))
 
     def _candidates(self) -> list[SingleForkPolicy]:
@@ -354,6 +383,7 @@ class FleetPolicyController:
             self._class_policies = dict(class_picks)
         self._policy = pol
         self.rho_hat = pick["rho"]
+        n_vetoed = sum(1 for row in rows if row["rho"] >= self.rho_max)
         self.history.append(
             PolicyDecision(
                 policy=pol,
@@ -364,8 +394,33 @@ class FleetPolicyController:
                 n_samples=len(self._samples),
                 explored=explored,
                 class_policies=class_picks,
+                n_vetoed=n_vetoed,
+                t=self._now,
             )
         )
+        from repro.obs.decisions import (
+            DecisionEvent, KIND_EXPLORE, KIND_REPLAN, KIND_VETO,
+        )
+
+        args = None
+        if class_picks:
+            args = {"class_" + k: p.label() for k, p in class_picks.items()}
+        self.decisions.log(DecisionEvent(
+            t=self._now, kind=KIND_REPLAN, label=pol.label(), trigger=trigger,
+            lam_hat=float(lam_hat), rho=float(pick["rho"]),
+            n_samples=len(self._samples), n_vetoed=n_vetoed, args=args,
+        ))
+        if n_vetoed:
+            self.decisions.log(DecisionEvent(
+                t=self._now, kind=KIND_VETO,
+                label=f"{n_vetoed}/{len(rows)} candidates over rho_max",
+                trigger=trigger, rho=float(self.rho_max), n_vetoed=n_vetoed,
+            ))
+        if explored:
+            self.decisions.log(DecisionEvent(
+                t=self._now, kind=KIND_EXPLORE, label=pol.label(),
+                trigger="epsilon", rho=float(pick["rho"]),
+            ))
 
 
 # --------------------------------------------------------------------------
@@ -397,7 +452,7 @@ class _LegacyProvider:
     def record_task_time(self, seconds, machine_class=None) -> None:
         self.inner.record_task_time(seconds)
 
-    def record_job_complete(self, n_tasks=None, machine_class=None) -> None:
+    def record_job_complete(self, n_tasks=None, machine_class=None, now=None) -> None:
         self.inner.record_job_complete(n_tasks=n_tasks)
 
 

@@ -47,6 +47,10 @@ class EventHeap:
         self._heap: list[tuple[float, int, Event]] = []
         self._seq = 0
         self._live = 0
+        # obs hook: a `repro.obs` Recorder counting heap traffic
+        # (events.pushed / popped / cancelled).  None (default) keeps the
+        # engine's hot loop at a single attribute check per operation.
+        self.recorder = None
 
     def __len__(self) -> int:
         return self._live
@@ -61,6 +65,8 @@ class EventHeap:
         self._seq += 1
         self._live += 1
         heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+        if self.recorder is not None:
+            self.recorder.count("events.pushed")
         return ev
 
     def cancel(self, ev: Event) -> None:
@@ -68,6 +74,8 @@ class EventHeap:
         if not ev.cancelled:
             ev.cancel()
             self._live -= 1
+            if self.recorder is not None:
+                self.recorder.count("events.cancelled")
 
     def pop(self) -> Optional[Event]:
         """Next live event in (time, seq) order; None when drained."""
@@ -76,6 +84,8 @@ class EventHeap:
             if ev.cancelled:
                 continue
             self._live -= 1
+            if self.recorder is not None:
+                self.recorder.count("events.popped")
             return ev
         return None
 

@@ -52,6 +52,11 @@ class FleetConfig:
     # reserves a one-class gang block per job — the KW fast-path oracle)
     classes: Optional[Sequence[MachineClass]] = None
     placement: str = "pooled"
+    # observability: False/None = emit to the process-wide recorder (a
+    # no-op unless `repro.obs.enable()` was called); True = give this sim
+    # its own fresh Recorder; a `repro.obs.Recorder` = use that one.
+    # Either way the live recorder comes back as `FleetReport.trace`.
+    obs: object = None
 
 
 @dataclasses.dataclass
@@ -63,6 +68,9 @@ class FleetReport:
     busy_time: float
     # FleetPolicyController or OnlinePolicyController, per adapt_mode
     controller: Optional[object] = None
+    # the repro.obs Recorder that captured this run (NullRecorder when
+    # disabled); feed to `repro.obs.write_chrome_trace` for Perfetto
+    trace: Optional[object] = None
 
     @property
     def final_policy(self) -> Optional[str]:
@@ -88,7 +96,10 @@ class FleetSim:
         self.controller = _build_controller(config)
 
     def run(self, jobs: Sequence[Job]) -> FleetReport:
+        from repro.obs import trace as _trace
+
         cfg = self.config
+        recorder = _trace.resolve_recorder(cfg.obs)
         sched = FleetScheduler(
             capacity=cfg.capacity,
             default_policy=cfg.policy,
@@ -100,7 +111,10 @@ class FleetSim:
             seed=cfg.seed,
             classes=cfg.classes,
             placement=cfg.placement,
+            recorder=recorder,
         )
+        if self.controller is not None and hasattr(self.controller, "bind_recorder"):
+            self.controller.bind_recorder(recorder)
         records = sched.run(jobs)
         stats = compute_stats(
             records,
@@ -116,6 +130,7 @@ class FleetSim:
             max_busy=sched.max_busy,
             busy_time=sched.busy_time,
             controller=self.controller,
+            trace=recorder if recorder is not None else _trace.get_recorder(),
         )
 
 

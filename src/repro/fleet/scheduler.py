@@ -63,6 +63,8 @@ from repro.core.policy import (
     num_stragglers,
 )
 
+from repro.obs import trace as _trace
+
 from .adaptive import as_policy_provider
 from .events import Event, EventHeap
 from .workload import Job, MachineClass
@@ -169,6 +171,8 @@ class FleetScheduler:
         seed: int = 0,
         classes: Optional[Sequence[MachineClass]] = None,
         placement: str = "pooled",
+        recorder=None,  # repro.obs Recorder; None = the process-wide one
+        obs_pid: int = _trace.PID_FLEET,
     ):
         if classes is None:
             if capacity is None:
@@ -211,6 +215,13 @@ class FleetScheduler:
         self.controller = as_policy_provider(controller)
         if self.controller is not None and hasattr(self.controller, "bind_fleet"):
             self.controller.bind_fleet(self.classes)
+        # obs: an explicit recorder pins this scheduler's trace sink; None
+        # defers to the process-wide recorder at each emission, so
+        # `obs.enable()` lights up schedulers built earlier too.  Every
+        # emit site guards on `rec.enabled` first — the disabled path adds
+        # one attribute read per event.
+        self._recorder = recorder
+        self.obs_pid = obs_pid
         # decorrelated from workload generators that may share `seed`
         self.rng = np.random.default_rng((0x5C4ED, seed))
         # multi-scheduler drivers (the DAG engine) observe completions here
@@ -234,12 +245,19 @@ class FleetScheduler:
     def free(self) -> int:
         return sum(self.free_by_class)
 
+    def _rec(self):
+        """The trace sink for this scheduler (explicit, else process-wide)."""
+        return self._recorder if self._recorder is not None else _trace.get_recorder()
+
     # ------------------------------------------------------------------ run
     def run(self, jobs: Sequence[Job]) -> list[JobRecord]:
         """Simulate to completion of every job; returns per-job records."""
         ids = [j.job_id for j in jobs]
         if len(set(ids)) != len(ids):
             raise ValueError("job_ids must be unique (running state is keyed by id)")
+        rec = self._rec()
+        if rec.enabled:
+            self.heap.recorder = rec
         for job in jobs:
             self.heap.push(job.arrival, "arrive", job)
         while self.heap:
@@ -279,6 +297,14 @@ class FleetScheduler:
             self._try_admit()  # a kill stage can net-free slots
         else:  # pragma: no cover
             raise RuntimeError(f"unknown event kind {ev.kind}")
+        rec = self._rec()
+        if rec.enabled:
+            # sampled after every event: together these draw the queue-depth
+            # and busy-slot time series under the job spans in Perfetto
+            rec.counter_sample("queue_depth", self.now, len(self.queue),
+                               pid=self.obs_pid)
+            rec.counter_sample("busy_slots", self.now,
+                               self.capacity - self.free, pid=self.obs_pid)
 
     # ------------------------------------------------------------ admission
     def _next_queued(self) -> Optional[Job]:
@@ -352,6 +378,11 @@ class FleetScheduler:
         for _, rjob, copy in victims[:needed]:
             self._cancel_copy(rjob, copy)
             rjob.n_preempted += 1
+        rec = self._rec()
+        if rec.enabled:
+            rec.instant("preempt", "scheduler", self.now, pid=self.obs_pid,
+                        args={"n_victims": needed})
+            rec.count("preemptions", needed)
 
     def _start_job(self, job: Job) -> None:
         policy = job.policy
@@ -387,6 +418,12 @@ class FleetScheduler:
             # aligned mode's home_class is the reservation ledger key and
             # stays authoritative; pooled mode derives it for reporting
             rjob.home_class = rjob.tasks[0].copies[0].cls
+        rec = self._rec()
+        if rec.enabled:
+            rec.instant("admit", "scheduler", self.now, pid=self.obs_pid,
+                        tid=job.job_id,
+                        args={"n_tasks": n, "policy": rjob.policy_label,
+                              "class": self.classes[rjob.home_class].name})
         # degenerate n=1 fork stages can trigger at 0 completions
         self._maybe_schedule_fork(rjob)
 
@@ -482,6 +519,13 @@ class FleetScheduler:
         rjob.next_stage += 1
         rjob.fork_pending = False
         stragglers = [i for i, t in enumerate(rjob.tasks) if not t.done]
+        rec = self._rec()
+        if rec.enabled:
+            rec.instant("fork", "scheduler", self.now, pid=self.obs_pid,
+                        tid=job_id,
+                        args={"stage": stage_idx, "r": r, "keep": keep,
+                              "n_stragglers": len(stragglers)})
+            rec.count("forks")
         want = r if keep else r + 1
         for i in stragglers:
             task = rjob.tasks[i]
@@ -533,9 +577,27 @@ class FleetScheduler:
             machine_class=cls_name,
         )
         self.records.append(rec)
+        trec = self._rec()
+        if trec.enabled:
+            # the job-lifecycle spans: "job" is the parent (arrival→finish),
+            # "queue" + "service" nest inside it and telescope exactly to
+            # the sojourn — the trace IS the latency decomposition
+            tid = job.job_id
+            args = {"n_tasks": job.n_tasks, "policy": rec.policy,
+                    "cost": round(rec.cost, 6), "n_replicas": rec.n_replicas,
+                    "class": cls_name}
+            trec.span("job", "scheduler", rec.arrival, rec.sojourn,
+                      pid=self.obs_pid, tid=tid, args=args)
+            if rec.wait > 0:
+                trec.span("queue", "scheduler", rec.arrival, rec.wait,
+                          pid=self.obs_pid, tid=tid)
+            trec.span("service", "scheduler", rec.start, rec.service,
+                      pid=self.obs_pid, tid=tid)
+            trec.count("jobs_completed")
+            trec.count("replicas_launched", rec.n_replicas)
         if self.controller is not None:
             self.controller.record_job_complete(
-                n_tasks=job.n_tasks, machine_class=cls_name
+                n_tasks=job.n_tasks, machine_class=cls_name, now=self.now
             )
         if self.job_done_hook is not None:
             # barrier hook: the DAG driver releases successor stages here

@@ -532,11 +532,11 @@ _FRONTIER_JIT_KEYS = (
 
 @partial(
     jax.jit,
-    static_argnames=("dist", "n", "n_jobs", "m_trials", "r_cap", "kernel"),
+    static_argnames=("dist", "n", "n_jobs", "m_trials", "r_cap", "kernel", "hist"),
 )
 def _frontier_jit(
     key, xs, ks, rs, keeps, lams, speeds, slot_class, class_slots,
-    dist, n, n_jobs, m_trials, r_cap, kernel,
+    dist, n, n_jobs, m_trials, r_cap, kernel, hist=None,
 ):
     """Evaluate EVERY (policy, λ) cell on one shared set of random draws.
 
@@ -548,6 +548,12 @@ def _frontier_jit(
     common-random-numbers variance reduction: frontier orderings and the
     argmin over candidates are far sharper than independent rollouts of
     equal size.
+
+    `hist` (static, a `repro.obs.HistSpec`) switches the off-device tail
+    payload: instead of the raw per-cell sojourn matrices (cells × m × J
+    floats), the program accumulates fixed-size γ-bucket sojourn AND cost
+    bincounts in-program and ships (cells × (2·n_bins + 6)) scalars — the
+    device-side observability path for large sweeps.
     """
     ka, kf = jax.random.split(key)
     quantile = dist.quantile if dist is not None else partial(emp_quantile, xs)
@@ -612,11 +618,22 @@ def _frontier_jit(
                 rho_block,
             ]
         )
-        return jnp.concatenate([base, class_util]), soj
+        if hist is None:
+            return jnp.concatenate([base, class_util]), soj
+        from repro.obs.device import device_histogram
 
-    # sojourn matrices come back to the host with the stats: XLA's CPU sort
-    # is ~10x slower than np.partition, so the percentile keys are computed
-    # host-side by _eval_cells (identical linear-interpolation semantics)
+        s_counts, s_min, s_max, s_sum = device_histogram(soj, hist)
+        c_counts, c_min, c_max, c_sum = device_histogram(cost, hist)
+        return jnp.concatenate([base, class_util]), (
+            s_counts, jnp.stack([s_min, s_max, s_sum]),
+            c_counts, jnp.stack([c_min, c_max, c_sum]),
+        )
+
+    # exact mode: sojourn matrices come back to the host with the stats —
+    # XLA's CPU sort is ~10x slower than np.partition, so the percentile
+    # keys are computed host-side by _eval_cells (identical linear-
+    # interpolation semantics).  hist mode keeps the samples on device and
+    # ships fixed-size bincounts instead.
     return jax.vmap(cellstats)(arrivals, starts, fins, slots, svc, T, C, lams)
 
 
@@ -660,9 +677,17 @@ def _eval_cells(
     kernel: bool,
     r_cap: Optional[int],
     pad_cells: bool,
+    tail="exact",
 ) -> list[dict]:
     """Shared engine behind `frontier` and `policy_search`: one stats dict
-    per (policy, λ) cell, computed by a single `_frontier_jit` dispatch."""
+    per (policy, λ) cell, computed by a single `_frontier_jit` dispatch.
+
+    `tail` selects how the percentile keys are computed: "exact" pulls the
+    full sojourn matrices host-side (np.partition semantics, bit-exact);
+    "hist" (or a `repro.obs.HistSpec`) keeps samples on device and ships
+    γ-bucket bincounts — p50/p99/p999 then carry the sketch's relative-
+    accuracy guarantee, the off-device transfer is fixed-size per cell,
+    and rows additionally get cost_p50/cost_p99/cost_p999."""
     if not cell_policies:
         raise ValueError("need at least one candidate policy")
     if any(lam <= 0 for lam in cell_lams):
@@ -688,15 +713,53 @@ def _eval_cells(
     for lst, fill in ((ks, ks[0]), (rs, rs[0]), (keeps, keeps[0]), (lams, lams[0])):
         lst.extend([fill] * (n_padded - n_cells))
 
-    stats, soj = _frontier_jit(
+    from repro.obs.device import HistSpec, DEFAULT_HIST, sketch_from_device
+
+    if tail == "exact":
+        hist = None
+    elif tail == "hist":
+        hist = DEFAULT_HIST
+    elif isinstance(tail, HistSpec):
+        hist = tail
+    else:
+        raise ValueError(f'tail must be "exact", "hist", or a HistSpec, got {tail!r}')
+
+    from repro.obs.trace import PID_PROFILER, get_recorder
+
+    rec = get_recorder()
+    if rec.enabled:
+        import time as _time
+
+        t0 = _time.perf_counter()
+    stats, payload = _frontier_jit(
         key, xs,
         jnp.array(ks, jnp.int32), jnp.array(rs, jnp.int32), jnp.array(keeps),
         jnp.array(lams), speeds, slot_class, class_slots,
-        dist, n, n_jobs, m_trials, r_cap, kernel,
+        dist, n, n_jobs, m_trials, r_cap, kernel, hist=hist,
     )
+    if rec.enabled:
+        jax.block_until_ready((stats, payload))
+        rec.span(
+            "frontier_dispatch", "engine", t0, _time.perf_counter() - t0,
+            pid=PID_PROFILER,
+            args=dict(cells=n_cells, padded=n_padded, m_trials=m_trials,
+                      n_jobs=n_jobs, tail="exact" if hist is None else "hist"),
+        )
+        rec.count("frontier.cells", n_cells)
     stats = np.asarray(stats)[:n_cells]
-    soj = np.asarray(soj)[:n_cells].reshape(n_cells, -1)
-    pcts = np.percentile(soj, (50.0, 99.0, 99.9), axis=1)
+    if hist is None:
+        soj = np.asarray(payload)[:n_cells].reshape(n_cells, -1)
+        pcts = np.percentile(soj, (50.0, 99.0, 99.9), axis=1)
+        cost_pcts = None
+    else:
+        s_counts, s_agg, c_counts, c_agg = (np.asarray(p)[:n_cells] for p in payload)
+        pcts = np.empty((3, n_cells))
+        cost_pcts = np.empty((3, n_cells))
+        for i in range(n_cells):
+            sk = sketch_from_device(s_counts[i], *s_agg[i], spec=hist)
+            pcts[:, i] = sk.quantiles((0.5, 0.99, 0.999))
+            ck = sketch_from_device(c_counts[i], *c_agg[i], spec=hist)
+            cost_pcts[:, i] = ck.quantiles((0.5, 0.99, 0.999))
     rows = []
     nk = len(_FRONTIER_JIT_KEYS)
     for i, (pol, lam) in enumerate(zip(cell_policies, cell_lams)):
@@ -704,6 +767,10 @@ def _eval_cells(
         d = dict(lam=float(lam), policy=pol.label(),
                  **dict(zip(_FRONTIER_JIT_KEYS, map(float, row[:nk]))))
         d["p50"], d["p99"], d["p999"] = (float(pcts[j, i]) for j in range(3))
+        if cost_pcts is not None:
+            d["cost_p50"], d["cost_p99"], d["cost_p999"] = (
+                float(cost_pcts[j, i]) for j in range(3)
+            )
         if slot is not None:  # mirror VectorFleetResult.summary(): per-class util
             for name, u in zip(names, row[nk:]):
                 d[f"util_{name}"] = float(u)
@@ -724,6 +791,7 @@ def frontier(
     kernel: bool = False,
     r_cap: Optional[int] = None,
     pad_cells: bool = True,
+    tail="exact",
 ) -> list[dict]:
     """Latency–cost frontier: the whole (policy × λ) cross-product as ONE
     fused device program over shared common-random-number draws.
@@ -740,6 +808,8 @@ def frontier(
     r you will ever search, e.g. the adaptive controller's `r_max + 1`).
     `kernel=True` routes the queue recursions through the Pallas
     `kernels.kw_queue` kernel, (trials × cells) tiled across its grid.
+    `tail="hist"` computes the percentile keys from in-program γ-bucket
+    histograms instead of the raw sojourn matrices (see `_eval_cells`).
     """
     policies = list(policies)
     lams = [float(lam) for lam in lams]
@@ -749,7 +819,7 @@ def frontier(
     cell_lams = lams * len(policies)
     return _eval_cells(
         dist_or_samples, cell_policies, cell_lams, n, n_jobs, m_trials, key,
-        c, classes, kernel, r_cap, pad_cells,
+        c, classes, kernel, r_cap, pad_cells, tail=tail,
     )
 
 
@@ -831,6 +901,7 @@ def policy_search(
     kernel: bool = False,
     r_cap: Optional[int] = None,
     pad_candidates: bool = True,
+    tail="exact",
 ) -> list[dict]:
     """Score candidate policies on an empirical trace at an estimated load.
 
@@ -860,7 +931,7 @@ def policy_search(
     candidates = list(candidates)
     rows = _eval_cells(
         samples, candidates, [float(lam)] * len(candidates), n, n_jobs, m_trials,
-        key, c, classes, kernel, r_cap, pad_candidates,
+        key, c, classes, kernel, r_cap, pad_candidates, tail=tail,
     )
     out = []
     for pol, row in zip(candidates, rows):

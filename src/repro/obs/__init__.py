@@ -1,0 +1,69 @@
+"""repro.obs — unified observability for the fleet stack.
+
+One package, four capabilities (DESIGN.md §13):
+
+  * `sketch`    — mergeable streaming quantile sketch (DDSketch-style);
+  * `registry`  — counters / gauges / sketch-backed histograms with labels;
+  * `trace`     — span recorder + NullRecorder zero-cost-when-disabled
+    protocol; `export` renders Chrome trace-event JSON for Perfetto;
+  * `decisions` — structured decision log for the adaptive controller;
+  * `device`    — in-program γ-bucket histograms for the fused engines;
+  * `profile`   — wall-time / HLO-byte / memory profiling of jitted fns.
+
+Quick start::
+
+    from repro import obs
+    rec = obs.enable()                      # process-wide recorder
+    report = FleetSim(FleetConfig(capacity=8, obs=True)).run(jobs)
+    obs.write_chrome_trace("trace.json", report.trace)
+"""
+
+from .decisions import (  # noqa: F401
+    DecisionEvent,
+    DecisionLog,
+    KIND_DRIFT,
+    KIND_EXPLORE,
+    KIND_REPLAN,
+    KIND_VETO,
+)
+from .device import (  # noqa: F401
+    DEFAULT_HIST,
+    HistSpec,
+    device_histogram,
+    sketch_from_device,
+)
+from .export import (  # noqa: F401
+    load_chrome_trace,
+    to_chrome_trace,
+    write_chrome_trace,
+)
+from .profile import kernel_profile  # noqa: F401
+from .registry import Counter, Gauge, Histogram, MetricsRegistry  # noqa: F401
+from .sketch import QuantileSketch, merge_all  # noqa: F401
+from .trace import (  # noqa: F401
+    NULL_RECORDER,
+    NullRecorder,
+    PID_CONTROLLER,
+    PID_DAG_BASE,
+    PID_FLEET,
+    PID_PROFILER,
+    PID_SERVING,
+    Recorder,
+    disable,
+    enable,
+    get_recorder,
+)
+
+__all__ = [
+    "QuantileSketch", "merge_all",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "Recorder", "NullRecorder", "NULL_RECORDER",
+    "enable", "disable", "get_recorder",
+    "PID_FLEET", "PID_CONTROLLER", "PID_SERVING", "PID_PROFILER",
+    "PID_DAG_BASE",
+    "DecisionEvent", "DecisionLog",
+    "KIND_REPLAN", "KIND_DRIFT", "KIND_EXPLORE", "KIND_VETO",
+    "HistSpec", "DEFAULT_HIST", "device_histogram", "sketch_from_device",
+    "to_chrome_trace", "write_chrome_trace", "load_chrome_trace",
+    "kernel_profile",
+]

@@ -1,0 +1,111 @@
+"""Wall-time / memory / HLO-byte profiling around jitted functions.
+
+`kernel_profile` is the obs-side wrapper for the fused engines and the
+Pallas `kw_queue` kernel: lower + compile once (timed), pull bytes-by-op
+from the optimized HLO via `repro.launch.hlo_profile.profile_hlo`, ask
+the compiled executable for its memory footprint (`memory_analysis()` —
+temp/argument/output bytes; this is the VMEM/scratch figure on real
+accelerators, guarded because some backends do not implement it), then
+time steady-state execution with `block_until_ready` over a few repeats.
+
+Results land in three places at once: returned as a plain dict, recorded
+as spans/counters on a trace recorder (profiler pid), and gauged into a
+metrics registry — so the bench lane, the Perfetto timeline, and the live
+metrics view all see the same numbers.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+
+from .registry import MetricsRegistry
+from .trace import PID_PROFILER, NULL_RECORDER, Recorder, NullRecorder
+
+__all__ = ["kernel_profile"]
+
+
+def _memory_analysis(compiled) -> dict:
+    """Executable memory footprint, empty if the backend lacks the API."""
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(ma, "generated_code_size_in_bytes", 0)
+            ),
+        }
+    except Exception:
+        return {}
+
+
+def kernel_profile(
+    fn,
+    *args,
+    name: str = "kernel",
+    static_argnames=None,
+    repeats: int = 3,
+    recorder: Recorder | NullRecorder = NULL_RECORDER,
+    registry: Optional[MetricsRegistry] = None,
+    scan_factor: float = 1.0,
+    **kwargs,
+) -> dict:
+    """Compile-and-time `fn(*args, **kwargs)`; returns a profile dict with
+    compile_s, best/mean wall_s, bytes-by-op (top HLO movers), and the
+    executable's memory footprint."""
+    # deferred: importing repro.launch.hlo_profile sets XLA_FLAGS for the
+    # 512-device dry-run, which must not happen from a plain `import
+    # repro.obs` before jax picks its backend
+    from repro.launch.hlo_profile import profile_hlo
+
+    jitted = jax.jit(fn, static_argnames=static_argnames)
+
+    t0 = time.perf_counter()
+    compiled = jitted.lower(*args, **kwargs).compile()
+    compile_s = time.perf_counter() - t0
+
+    byte_agg = profile_hlo(compiled.as_text(), scan_factor=scan_factor)
+    mem = _memory_analysis(compiled)
+
+    times = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        out = compiled(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+
+    prof = {
+        "name": name,
+        "compile_s": compile_s,
+        "wall_s": min(times),
+        "wall_mean_s": sum(times) / len(times),
+        "repeats": len(times),
+        "hlo_bytes_total": sum(byte_agg.values()),
+        "hlo_bytes_by_op": dict(
+            sorted(byte_agg.items(), key=lambda kv: -kv[1])[:10]
+        ),
+        **mem,
+    }
+
+    if recorder.enabled:
+        wall0 = compile_s  # lay exec spans after the compile span
+        recorder.span(f"{name}:compile", "profile", 0.0, compile_s,
+                      pid=PID_PROFILER,
+                      args={"hlo_bytes_total": prof["hlo_bytes_total"], **mem})
+        for i, t in enumerate(times):
+            recorder.span(f"{name}:exec", "profile", wall0, t,
+                          pid=PID_PROFILER, tid=0, args={"repeat": i})
+            wall0 += t
+        recorder.count(f"profile.{name}.runs", len(times))
+    if registry is not None:
+        registry.gauge("kernel_wall_s", {"kernel": name}).set(prof["wall_s"])
+        registry.gauge("kernel_compile_s", {"kernel": name}).set(compile_s)
+        if "temp_bytes" in mem:
+            registry.gauge("kernel_temp_bytes", {"kernel": name}).set(
+                mem["temp_bytes"]
+            )
+    return prof

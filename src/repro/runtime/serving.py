@@ -25,6 +25,8 @@ import numpy as np
 
 from repro.core.adaptive import OnlinePolicyController
 from repro.core.policy import SingleForkPolicy
+from repro.obs.registry import MetricsRegistry
+from repro.obs.sketch import QuantileSketch
 
 from .cluster import SimCluster
 from .executor import ExecutionReport, SpeculativeExecutor
@@ -37,6 +39,7 @@ class ServeStats:
     p50: float
     p99: float
     policy: str
+    p999: float = float("nan")
 
 
 class HedgedServer:
@@ -53,6 +56,7 @@ class HedgedServer:
         self.controller = OnlinePolicyController(objective="latency")
         self._policy = policy or SingleForkPolicy(p=0.05, r=1, keep=True)
         self.adapt = adapt
+        self.latency_sketch = QuantileSketch()
 
     def serve_batch(self, requests: Sequence[object]) -> tuple[list, ServeStats]:
         tasks = [(lambda r=r: self.serve_fn(r)) for r in requests]
@@ -62,12 +66,19 @@ class HedgedServer:
         self.controller.record_job_complete(n_tasks=len(requests))
         if self.adapt and self.controller.current_policy().p > 0:
             self._policy = self.controller.current_policy()
+        # the batch's finish times stream into the server's lifetime sketch,
+        # so per-batch ServeStats carry the SKETCH tails (live across every
+        # batch served so far) rather than a 32-sample np.percentile whose
+        # "p999" is really the batch max
         finishes = np.array([r.finish_time for r in report.results])
+        self.latency_sketch.add_many(finishes)
+        p50, p99, p999 = self.latency_sketch.quantiles((0.5, 0.99, 0.999))
         stats = ServeStats(
             latency=report.latency,
             cost=report.cost,
-            p50=float(np.percentile(finishes, 50)),
-            p99=float(np.percentile(finishes, 99)),
+            p50=p50,
+            p99=p99,
+            p999=p999,
             policy=self._policy.label(),
         )
         return [r.value for r in report.results], stats
@@ -111,6 +122,7 @@ class FleetHedgedServer:
         classes=None,
         placement: str = "pooled",
         dag=None,
+        obs=None,
     ):
         """`capacity` is a single homogeneous replica pool; alternatively
         pass `classes` (a sequence of `repro.fleet.MachineClass`, e.g. a
@@ -132,8 +144,17 @@ class FleetHedgedServer:
         stage pool then a decode stage pool, with the stages' own task
         counts, latency distributions, per-stage hedging policies, and a
         barrier between stages; `capacity` / `latency_dist` / `adapt` are
-        then carried by the DAG's stage specs and must be omitted."""
+        then carried by the DAG's stage specs and must be omitted.
+
+        `obs` follows the fleet convention (None → global recorder,
+        True → fresh private Recorder, a Recorder → that one) and is
+        handed to the backing sim; serving-side tail latencies are kept
+        per priority class in `self.metrics` regardless (see
+        `tail_latencies`)."""
         from repro.fleet import FleetConfig, FleetSim
+
+        self.metrics = MetricsRegistry()
+        self._obs = obs
 
         if dag is not None:
             from repro.dag import DagFleetConfig, DagFleetSim
@@ -160,7 +181,7 @@ class FleetHedgedServer:
             self.capacity = sum(s.c * s.n_tasks for s in dag.stages)
             self.latency_dist = None
             self.serve_fn = serve_fn
-            self.sim = DagFleetSim(DagFleetConfig(dag=dag, seed=seed))
+            self.sim = DagFleetSim(DagFleetConfig(dag=dag, seed=seed, obs=obs))
             return
         self.dag = None
         if capacity is None and classes is None:
@@ -185,6 +206,7 @@ class FleetHedgedServer:
                 seed=seed,
                 classes=classes,
                 placement=placement,
+                obs=obs,
             )
         )
 
@@ -199,9 +221,16 @@ class FleetHedgedServer:
         arrivals: Optional[Sequence[float]] = None,
         rate: float = 1.0,
         seed: int = 0,
+        priorities: Optional[Sequence[int]] = None,
     ) -> tuple[list[BatchOutcome], "object"]:
         """Serve many batches arriving over time; returns per-batch outcomes
-        (values in request order) and the fleet-level stats."""
+        (values in request order) and the fleet-level stats.
+
+        `priorities` assigns one priority class per batch (lower = more
+        urgent; it also drives the scheduler's "priority" discipline).
+        Each batch's sojourn streams into a per-class latency histogram in
+        `self.metrics`, so `tail_latencies()` reports live p50/p99/p999
+        per class without retaining samples."""
         from repro.fleet import Job
 
         if arrivals is None:
@@ -209,6 +238,10 @@ class FleetHedgedServer:
             arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(batches)))
         if len(arrivals) != len(batches):
             raise ValueError("need one arrival time per batch")
+        if priorities is None:
+            priorities = [0] * len(batches)
+        elif len(priorities) != len(batches):
+            raise ValueError("need one priority per batch")
         if self.dag is not None:
             # pipeline mode: each batch is one DAG job through the stage
             # pools (task counts and latency draws come from the specs);
@@ -224,9 +257,16 @@ class FleetHedgedServer:
                 )
                 for rec, batch in zip(report.jobs, batches)
             ]
+            self._observe_latencies(outcomes, priorities)
             return outcomes, report.stats
         jobs = [
-            Job(job_id=i, arrival=float(arrivals[i]), n_tasks=len(b), dist=self.latency_dist)
+            Job(
+                job_id=i,
+                arrival=float(arrivals[i]),
+                n_tasks=len(b),
+                dist=self.latency_dist,
+                priority=int(priorities[i]),
+            )
             for i, b in enumerate(batches)
         ]
         report = self.sim.run(jobs)
@@ -241,4 +281,28 @@ class FleetHedgedServer:
                     cost=rec.cost,
                 )
             )
+        self._observe_latencies(outcomes, priorities)
         return outcomes, report.stats
+
+    def _observe_latencies(self, outcomes, priorities) -> None:
+        for out, pri in zip(outcomes, priorities):
+            self.metrics.histogram(
+                "serve.sojourn", labels={"priority": str(int(pri))}
+            ).observe(out.sojourn)
+
+    def tail_latencies(self) -> dict:
+        """Live per-priority-class latency tails from the streaming sketch:
+        {priority -> {"p50", "p99", "p999", "count"}} over every batch
+        served through `serve_stream` so far."""
+        tails: dict = {}
+        for label_key in self.metrics.labels_for("serve.sojourn"):
+            labels = dict(label_key)
+            hist = self.metrics.histogram("serve.sojourn", labels=labels)
+            p50, p99, p999 = hist.sketch.quantiles((0.5, 0.99, 0.999))
+            tails[int(labels["priority"])] = {
+                "p50": p50,
+                "p99": p99,
+                "p999": p999,
+                "count": hist.sketch.count,
+            }
+        return dict(sorted(tails.items()))
