@@ -5,6 +5,12 @@ Measurements:
     as ONE device program over shared CRN draws) raced against the legacy
     per-cell dispatch loop (`vector.sweep_loop`) on a 5-policy × 6-λ grid
     — gated on ≥5× speedup and ≤5σ agreement on every shared cell;
+  * the cross-family frontier lane: one grid mixing every policy-algebra
+    family (classic single fork, delayed relaunch, (n, d) group selection,
+    multi-fork schedules) — gated on (a) the whole mixed grid evaluating
+    as ONE device dispatch (the engine's own `frontier_dispatch` span is
+    the witness) and (b) algebra-lowered single-fork cells matching the
+    pre-refactor fused frontier numbers exactly, float for float;
   * the adaptive controller's re-plan latency: the padded fused search
     (power-of-two candidate buckets + pinned r_cap, so grid flexing never
     recompiles) vs the PR-3-style unpadded search across a schedule of
@@ -44,7 +50,14 @@ import time
 import jax
 import numpy as np
 
-from repro.core import ShiftedExp, SingleForkPolicy
+from repro.core import (
+    MultiForkPolicy,
+    ShiftedExp,
+    SingleForkPolicy,
+    as_fork_policy,
+    delayed_relaunch,
+    group_replication,
+)
 from repro.obs import trace as obs_trace
 from repro.fleet import (
     REGIME_SHIFT,
@@ -96,6 +109,20 @@ ADAPT = REGIME_SHIFT
 FRONTIER_POLICIES = POLICIES + (SingleForkPolicy(0.3, 2, False),)
 FRONTIER_LAMS = (0.05, 0.08, 0.12, 0.16, 0.2, 0.24)
 FRONTIER_SPEEDUP_FLOOR = 5.0
+
+# cross-family lane: every algebra family in ONE grid — classic single
+# fork, wall-clock delayed relaunch, (n, d) group selection, a multi-fork
+# schedule — evaluated as one fused dispatch over shared CRN draws
+CROSS_POLICIES = (
+    SingleForkPolicy(0.0, 0, True),
+    SingleForkPolicy(0.1, 1, True),
+    SingleForkPolicy(0.2, 1, False),
+    delayed_relaunch(2.0),
+    delayed_relaunch(3.0, r=1, keep=True),
+    group_replication(0.2, 1, N_TASKS // 4),
+    MultiForkPolicy(((0.4, 1, True), (0.1, 1, False))),
+)
+CROSS_LAMS = (0.05, 0.12, 0.2)
 
 # c>1 sweep: 3 gang blocks triple the service capacity, so the λ grid
 # scales by 3 to probe the same ρ range
@@ -332,6 +359,68 @@ def run():
         ("fleet_frontier_hist_tail", hist_s * 1e6 / (OBS_REPS * len(hist_rows)),
          f"hist/exact={hist_s / max(obs_off_s, 1e-9):.2f};"
          f"max_p99_rel_dev={hist_dev:.3f}")
+    )
+
+    # -- cross-family frontier: the whole policy algebra, one dispatch -----
+    # gate 1: the algebra-lowered single-fork grid reproduces the
+    # pre-refactor fused frontier numbers EXACTLY — quantile/full-width
+    # cells lower onto the historical device program, so `as_fork_policy`
+    # twins of the SingleForkPolicy grid must match float for float.
+    algebra_rows = vector.frontier(
+        DIST, tuple(as_fork_policy(p) for p in FRONTIER_POLICIES), FRONTIER_LAMS,
+        N_TASKS, N_JOBS, m_trials=M_TRIALS, key=fkey,
+    )
+    bitwise_fields = ("mean_sojourn", "mean_cost", "mean_wait", "p50", "p99")
+    algebra_mismatch = sum(
+        1
+        for a, f in zip(algebra_rows, fused_rows)
+        for field in bitwise_fields
+        if a[field] != f[field]
+    )
+    if not record_gate(
+        "algebra_single_fork_bitwise", algebra_mismatch == 0,
+        f"mismatched_fields={algebra_mismatch} over {len(fused_rows)} cells "
+        f"x {len(bitwise_fields)} keys",
+    ):
+        failures.append(
+            f"algebra-lowered single-fork cells drifted from the pre-refactor "
+            f"fused frontier ({algebra_mismatch} field mismatches)"
+        )
+    # gate 2: a grid MIXING every family is still one fused device dispatch
+    # (witnessed by the engine's own frontier_dispatch span)
+    cross_key = jax.random.PRNGKey(23)
+    vector.frontier(
+        DIST, CROSS_POLICIES, CROSS_LAMS, N_TASKS, N_JOBS, m_trials=M_TRIALS,
+        key=cross_key,
+    )  # warm the general-evaluator compilation
+    cross_rec = obs_trace.enable()
+    try:
+        t0 = time.perf_counter()
+        cross_rows = vector.frontier(
+            DIST, CROSS_POLICIES, CROSS_LAMS, N_TASKS, N_JOBS, m_trials=M_TRIALS,
+            key=cross_key,
+        )
+        cross_s = time.perf_counter() - t0
+    finally:
+        obs_trace.disable()
+    dispatches = cross_rec.spans_named("frontier_dispatch")
+    n_cross_cells = len(CROSS_POLICIES) * len(CROSS_LAMS)
+    one_dispatch = (
+        len(dispatches) == 1 and dispatches[0].args["cells"] == n_cross_cells
+    )
+    if not record_gate(
+        "cross_family_one_dispatch", one_dispatch,
+        f"dispatches={len(dispatches)} cells="
+        f"{dispatches[0].args['cells'] if dispatches else 0}/{n_cross_cells}",
+    ):
+        failures.append(
+            f"mixed-family grid took {len(dispatches)} device dispatches "
+            f"instead of 1"
+        )
+    rows.append(
+        ("fleet_cross_family_frontier", cross_s * 1e6 / len(cross_rows),
+         f"families=single+relaunch+group+multi;cells={n_cross_cells};"
+         f"dispatches={len(dispatches)}")
     )
 
     # -- adaptive re-plan latency: padded fused search vs PR-3 unpadded ----
@@ -624,6 +713,14 @@ def run():
                 speedup=fusion_speedup,
                 max_cell_deviation_sigma=frontier_dev,
                 rows=fused_rows,
+            ),
+            cross_family=dict(
+                policies=[p.label() for p in CROSS_POLICIES],
+                lams=list(CROSS_LAMS),
+                fused_s=cross_s,
+                n_dispatches=len(dispatches),
+                algebra_single_fork_mismatches=algebra_mismatch,
+                rows=cross_rows,
             ),
             replan_latency=dict(
                 padded_s=replan[True],

@@ -12,7 +12,7 @@ from repro.core import (
 )
 from repro.data import TRACE_JOBS, synthesize_trace
 
-from .common import save_json, time_us
+from .common import save_json
 
 P_GRID = np.round(np.arange(0.02, 0.42, 0.04), 3)
 

@@ -1,18 +1,112 @@
 """Paper Figs. 7-10: trace histograms + bootstrap E[T]-E[C] trade-offs for
 the three (synthesized; see data/traces.py) cluster jobs, r in {1,2,3},
-p in [0, 0.5], keep and kill."""
+p in [0, 0.5], keep and kill.
+
+Plus the cross-family Pareto lane: every policy family in the algebra
+(single-fork, multi-stage schedule, delayed relaunch, group replication)
+raced on the SAME mean-normalized stage traces through one fused frontier
+dispatch per stage, with the (E[C], E[T]) Pareto front marked per stage —
+the table `update_experiments` injects into EXPERIMENTS.md §Algebra."""
 
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from repro.core import BASELINE, SingleForkPolicy, estimate
+from repro.core import (
+    BASELINE,
+    Empirical,
+    MultiForkPolicy,
+    SingleForkPolicy,
+    delayed_relaunch,
+    estimate,
+    group_replication,
+)
 from repro.data import TRACE_JOBS, synthesize_trace
+from repro.data.traces import STAGE_TRACES, load_stage_trace
+from repro.fleet import vector
 
 from .common import save_json, time_us
 
 P_GRID = np.round(np.arange(0.02, 0.52, 0.04), 3)
+
+# -- cross-family Pareto on stage traces ---------------------------------
+# one representative per family knob: quantile keep/kill, wall-clock
+# relaunch keep/kill, group widths d | n, and a two-stage schedule
+CROSS_N = 10
+CROSS_LAMS = (0.08, 0.14)
+CROSS_GRID = (
+    BASELINE,
+    SingleForkPolicy(0.1, 1, True),
+    SingleForkPolicy(0.2, 1, False),
+    SingleForkPolicy(0.3, 2, False),
+    delayed_relaunch(2.0),
+    delayed_relaunch(1.5, r=1, keep=True),
+    group_replication(0.2, 1, 5),
+    group_replication(0.3, 1, 2),
+    MultiForkPolicy(((0.4, 1, True), (0.1, 1, False))),
+)
+
+
+def _pareto_front(rows):
+    """Indices of rows not dominated in (mean_cost, mean_sojourn)."""
+    front = []
+    for i, a in enumerate(rows):
+        dominated = any(
+            (b["mean_cost"] <= a["mean_cost"] and b["mean_sojourn"] <= a["mean_sojourn"])
+            and (b["mean_cost"] < a["mean_cost"] or b["mean_sojourn"] < a["mean_sojourn"])
+            for b in rows
+        )
+        if not dominated:
+            front.append(i)
+    return front
+
+
+def cross_family_stage_pareto():
+    """One fused mixed-family dispatch per stage trace; Pareto per (stage, λ)."""
+    artifact = {
+        "n": CROSS_N,
+        "lams": list(CROSS_LAMS),
+        "policies": [p.label() for p in CROSS_GRID],
+        "stages": {},
+    }
+    us = None
+    for stage in sorted(STAGE_TRACES):
+        dist = Empirical(load_stage_trace(stage))
+        t0 = time_us(
+            lambda d=dist: vector.frontier(
+                d, CROSS_GRID, CROSS_LAMS, CROSS_N, 300,
+                m_trials=32, key=jax.random.PRNGKey(7),
+            )[0]["mean_sojourn"]
+        )
+        us = t0 if us is None else us
+        rows = vector.frontier(
+            dist, CROSS_GRID, CROSS_LAMS, CROSS_N, 300,
+            m_trials=32, key=jax.random.PRNGKey(7),
+        )
+        by_lam = {}
+        for lam in CROSS_LAMS:
+            cell = [r for r in rows if abs(r["lam"] - lam) < 1e-12]
+            fr = set(_pareto_front(cell))
+            by_lam[str(lam)] = [
+                dict(
+                    policy=r["policy"],
+                    mean_sojourn=r["mean_sojourn"],
+                    p99=r["p99"],
+                    mean_cost=r["mean_cost"],
+                    on_front=i in fr,
+                )
+                for i, r in enumerate(cell)
+            ]
+        artifact["stages"][stage] = by_lam
+    save_json("trace_cross_family", artifact)
+    n_front = sum(
+        e["on_front"]
+        for st in artifact["stages"].values()
+        for cell in st.values()
+        for e in cell
+    )
+    return ("trace_cross_family_pareto", us, f"stages=3;cells={len(CROSS_GRID) * len(CROSS_LAMS) * 3};front_pts={n_front}")
 
 
 def run():
@@ -54,4 +148,5 @@ def run():
             )
         )
     save_json("trace_fig8_9_10", artifact)
+    rows.append(cross_family_stage_pareto())
     return rows

@@ -40,6 +40,30 @@ def dryrun_summary() -> str:
     return hdr + "\n" + "\n".join(rows)
 
 
+def cross_family_table() -> str:
+    p = ROOT / "benchmarks" / "results" / "trace_cross_family.json"
+    if not p.exists():
+        return "_run `python -m benchmarks.run --only trace` to generate._"
+    art = json.loads(p.read_text())
+    lam = max(art["lams"])
+    out = [
+        f"λ = {lam}, n = {art['n']} tasks/job, mean-1 stage traces; ✓ marks the "
+        "per-stage (E[C], E[T]) Pareto front.",
+        "",
+        "| stage | policy | E[T] | p99 T | E[C] | front |",
+        "|---|---|---|---|---|---|",
+    ]
+    for stage in sorted(art["stages"]):
+        for e in art["stages"][stage][str(lam)]:
+            label = e["policy"].replace("|", "\\|")
+            out.append(
+                f"| {stage} | `{label}` | {e['mean_sojourn']:.3f} "
+                f"| {e['p99']:.3f} | {e['mean_cost']:.3f} "
+                f"| {'✓' if e['on_front'] else ''} |"
+            )
+    return "\n".join(out)
+
+
 def inject(text: str, marker: str, content: str) -> str:
     block = f"<!-- {marker} -->"
     assert block in text, marker
@@ -55,6 +79,7 @@ def main():
     rows = roofline.load_all()
     single = [r for r in rows if r["mesh"] == "single"]
     multi = [r for r in rows if r["mesh"] == "multi"]
+    text = inject(text, "CROSS_FAMILY_PARETO", cross_family_table())
     text = inject(text, "DRYRUN_TABLE", dryrun_summary())
     text = inject(text, "ROOFLINE_TABLE_SINGLE", roofline.markdown_table(single))
     text = inject(

@@ -9,7 +9,26 @@ from .distributions import (  # noqa: F401
     Weibull,
     upper_end_point,
 )
-from .policy import BASELINE, MultiForkPolicy, SingleForkPolicy, num_stragglers  # noqa: F401
+from .policy import (  # noqa: F401
+    BASELINE,
+    AnySlot,
+    AtQuantile,
+    AtTime,
+    ForkPolicy,
+    GroupSelect,
+    LoweredPolicies,
+    MultiForkPolicy,
+    OnClass,
+    SingleForkPolicy,
+    as_fork_policy,
+    delayed_relaunch,
+    fork_index,
+    group_replication,
+    lower_policies,
+    max_replicas,
+    num_stragglers,
+    on_class,
+)
 from .residual import ResidualDistribution  # noqa: F401
 from .analysis import (  # noqa: F401
     LatencyCost,

@@ -26,10 +26,18 @@ import jax
 import jax.numpy as jnp
 
 from .distributions import Distribution
-from .policy import MultiForkPolicy, SingleForkPolicy, num_stragglers
+from .policy import (
+    MODE_QUANTILE,
+    MultiForkPolicy,
+    SingleForkPolicy,
+    lower_policies,
+    num_stragglers,
+)
 
 __all__ = [
     "SimResult",
+    "lowered_policy_eval",
+    "policy_draws",
     "simulate",
     "simulate_multifork",
     "single_fork_batch",
@@ -102,6 +110,132 @@ def single_fork_trial(key, dist: Distribution, n: int, s: int, r: int, keep: boo
     return single_fork_batch(key, dist, n, s, r, keep, shape=())
 
 
+# --------------------------------------------------------------------------
+# the generalized evaluator: one program for the whole policy algebra
+# --------------------------------------------------------------------------
+
+
+def policy_draws(key, quantile, shape, n: int, r_cap: int, n_stages: int = 1):
+    """Shared-CRN draws for the lowered-policy evaluator.
+
+    Returns (x, fresh): x = `shape`-batch of n raw (UNsorted) original
+    execution times, fresh = per-stage fresh-replica block of width r_cap
+    aligned by completion rank.  Exactly two bulk threefry calls; for
+    n_stages=1 the bit stream is identical to the historical
+    `fleet.vector.fork_draws` (the sort there moved into the evaluator),
+    which is what keeps algebra-lowered single-fork cells bit-identical to
+    the pre-algebra fused path.
+    """
+    kx, ky = jax.random.split(key)
+    x = quantile(jax.random.uniform(kx, shape + (n,)))
+    fresh = quantile(jax.random.uniform(ky, shape + (n_stages, n, r_cap)))
+    return x, fresh
+
+
+def lowered_policy_eval(x, fresh, mode, k, t, r, keep, d):
+    """(T, C) for one lowered policy cell on shared draws.
+
+    Evaluates the full algebra — quantile- and time-triggered stages,
+    keep|kill, group selection, multi-stage schedules — as one traced
+    program; every argument after `fresh` is a (traced) lowered param from
+    `core.policy.lower_policies`, so a grid of mixed families is just a
+    vmap of this function over the param rows.
+
+      x      (..., n)             raw original execution times
+      fresh  (..., S, n, r_cap)   fresh-replica draws, cummin'd here
+      mode, k, t, r, keep  (S,)   per-stage lowered params
+      d      ()                   group width (= n → unrestricted)
+
+    Semantics per stage: tasks are ranked within their group of d by
+    current earliest-finish time; a quantile stage declares positions
+    >= k (per group) stragglers at the group's k-th finish, a time stage
+    declares everything unfinished at t a straggler.  Stragglers get r
+    fresh copies (keep) or are killed and restarted with r+1 (kill);
+    first finisher wins.  Cost is exact cohort accounting (Definition 2),
+    and single-stage quantile cells at full width reproduce the
+    historical `fleet.vector.masked_single_fork` op sequence bit for bit.
+    """
+    n = x.shape[-1]
+    n_stages = fresh.shape[-3]
+    iota = jnp.arange(n)
+    gid = iota // d  # group of each ORIGINAL task index
+    pos = iota % d  # within-group rank after the group-blocked sort
+    base = gid * d
+    cm = jax.lax.cummin(fresh, axis=fresh.ndim - 1)
+
+    finish = x
+    cohorts = [(jnp.zeros_like(x), jnp.ones_like(x))]  # (start, n_copies)
+    cost = jnp.zeros(x.shape[:-1], x.dtype)
+    t_leg = c_leg = None
+    for s in range(n_stages):
+        # group-blocked sort of current finish times: two-level stable
+        # argsort (values, then group ids) — for d = n the group ids are
+        # all zero and this is bitwise jnp.sort(finish)
+        o1 = jnp.argsort(finish, axis=-1)
+        o2 = jnp.argsort(jnp.take(gid, o1), axis=-1, stable=True)
+        perm = jnp.take_along_axis(o1, o2, axis=-1)
+        f_p = jnp.take_along_axis(finish, perm, axis=-1)
+
+        is_q = mode[s] == MODE_QUANTILE
+        k_s, t_s, r_s, keep_s = k[s], t[s], r[s], keep[s]
+        # each position's group fork instant: the group's k-th finish
+        tau_q = jnp.take_along_axis(
+            f_p, jnp.broadcast_to(jnp.maximum(base + k_s - 1, 0), f_p.shape), axis=-1
+        )
+        tau = jnp.where(is_q, tau_q, t_s)
+        # inactive padding stages lower to mode=TIME with t=inf → no stragglers
+        strag = jnp.where(is_q, pos >= k_s, f_p > t_s)
+
+        cms = cm[..., s, :, :]
+        fresh_keep = jnp.where(
+            r_s > 0, jnp.take(cms, jnp.maximum(r_s - 1, 0), axis=-1), jnp.inf
+        )
+        fresh_kill = jnp.take(cms, r_s, axis=-1)
+        remaining = f_p - tau
+        y = jnp.where(keep_s, jnp.minimum(remaining, fresh_keep), fresh_kill)
+        y = jnp.where(strag, y, 0.0)
+
+        if n_stages == 1:
+            # the historical single-fork op sequence, bit for bit
+            # (selected below for quantile cells at full width)
+            t1 = jnp.take(f_p, jnp.maximum(k_s - 1, 0), axis=-1)
+            c1 = jnp.sum(jnp.where(strag, 0.0, f_p), axis=-1) + (n - k_s) * t1
+            t_leg = t1 + jnp.max(y, axis=-1)
+            c_leg = (c1 + (r_s + 1.0) * jnp.sum(y, axis=-1)) / n
+
+        # scatter back to original task order and do cohort accounting
+        inv = jnp.argsort(perm, axis=-1)
+        strag_o = jnp.take_along_axis(strag & (mode[s] >= 0), inv, axis=-1)
+        tau_o = jnp.take_along_axis(jnp.broadcast_to(tau, f_p.shape), inv, axis=-1)
+        newf = jnp.take_along_axis(jnp.where(strag, tau + y, f_p), inv, axis=-1)
+        settle = strag_o & jnp.logical_not(keep_s)
+        new_cohorts = []
+        for start, count in cohorts:
+            cost = cost + jnp.sum(
+                jnp.where(settle, count * jnp.maximum(tau_o - start, 0.0), 0.0),
+                axis=-1,
+            )
+            new_cohorts.append((start, jnp.where(settle, 0.0, count)))
+        extra = jnp.where(strag_o, jnp.where(keep_s, r_s * 1.0, r_s + 1.0), 0.0)
+        new_cohorts.append((jnp.where(strag_o, tau_o, 0.0), extra))
+        cohorts = new_cohorts
+        finish = newf
+    for start, count in cohorts:
+        cost = cost + jnp.sum(count * jnp.maximum(finish - start, 0.0), axis=-1)
+    t_gen = jnp.max(finish, axis=-1)
+    c_gen = cost / n
+    if n_stages == 1:
+        use_leg = (mode[0] == MODE_QUANTILE) & (d == n)
+        return jnp.where(use_leg, t_leg, t_gen), jnp.where(use_leg, c_leg, c_gen)
+    return t_gen, c_gen
+
+
+@partial(jax.jit, static_argnames=("dist", "n", "m", "n_stages", "r_cap"))
+def _simulate_lowered_jit(key, dist, mode, k, t, r, keep, d, n, m, n_stages, r_cap):
+    x, fresh = policy_draws(key, dist.quantile, (m,), n, r_cap, n_stages)
+    return lowered_policy_eval(x, fresh, mode, k, t, r, keep, d)
+
+
 @partial(jax.jit, static_argnames=("dist", "policy", "n", "m"))
 def _simulate_jit(key, dist, policy, n, m):
     s = num_stragglers(n, policy.p)
@@ -112,15 +246,45 @@ def _simulate_jit(key, dist, policy, n, m):
 
 def simulate(
     dist: Distribution,
-    policy: SingleForkPolicy,
+    policy,
     n: int,
     m: int = 1000,
     key=None,
 ) -> SimResult:
-    """m Monte-Carlo trials of an n-task job under `policy`."""
+    """m Monte-Carlo trials of an n-task job under `policy`.
+
+    Accepts any algebra policy (`SingleForkPolicy`, `MultiForkPolicy`,
+    `ForkPolicy`, thin constructors like `delayed_relaunch` /
+    `group_replication`).  `SingleForkPolicy` keeps its historical program
+    (bit-identical draws and floats); everything else lowers to the fused
+    tensor evaluator on the same CRN layout.  `OnClass` placement is queue
+    geometry, not single-job sampling — rejected here.
+    """
     if key is None:
         key = jax.random.PRNGKey(0)
-    lat, cost = _simulate_jit(key, dist, policy, n, m)
+    if isinstance(policy, SingleForkPolicy):
+        lat, cost = _simulate_jit(key, dist, policy, n, m)
+        return SimResult(latency=lat, cost=cost)
+    lp = lower_policies([policy], n)
+    if lp.class_names[0] is not None:
+        raise ValueError(
+            "OnClass policies restrict placement in a fleet; a single job "
+            "has no machine classes to restrict — use FleetScheduler"
+        )
+    lat, cost = _simulate_lowered_jit(
+        key,
+        dist,
+        jnp.asarray(lp.mode[0]),
+        jnp.asarray(lp.k[0]),
+        jnp.asarray(lp.t[0]),
+        jnp.asarray(lp.r[0]),
+        jnp.asarray(lp.keep[0]),
+        int(lp.d[0]),
+        n,
+        m,
+        lp.n_stages,
+        max(lp.r_max + 1, 1),
+    )
     return SimResult(latency=lat, cost=cost)
 
 

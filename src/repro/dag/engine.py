@@ -35,7 +35,6 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.policy import SingleForkPolicy
 from repro.fleet.events import EventHeap, OwnedHeap
 from repro.fleet.metrics import DagStats, compute_dag_stats
 from repro.fleet.scheduler import FleetScheduler, JobRecord
@@ -90,7 +89,7 @@ class DagFleetScheduler:
     def __init__(
         self,
         dag: JobDAG,
-        policies: Optional[Sequence[SingleForkPolicy]] = None,
+        policies: Optional[Sequence] = None,
         relaunch_delay: float = 0.0,
         fork_overhead: float = 0.0,
         placement: str = "aligned",
@@ -223,7 +222,7 @@ class DagFleetScheduler:
 @dataclasses.dataclass
 class DagFleetConfig:
     dag: JobDAG
-    policies: Optional[Sequence[SingleForkPolicy]] = None  # None -> spec policies
+    policies: Optional[Sequence] = None  # None -> spec policies
     relaunch_delay: float = 0.0
     fork_overhead: float = 0.0
     placement: str = "aligned"  # the KW fast-path oracle; "pooled" also legal

@@ -34,9 +34,28 @@ from typing import Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.distributions import Distribution, Empirical
-from repro.core.policy import BASELINE, SingleForkPolicy
+from repro.core.policy import BASELINE, OnClass, SingleForkPolicy, as_fork_policy
 
 __all__ = ["JobDAG", "StageSpec"]
+
+
+def _check_stage_policy(stage_name: str, policy) -> None:
+    """A per-stage policy is anything the algebra lowers — except OnClass:
+    a DAG stage's pool has no machine classes to restrict."""
+    if isinstance(policy, SingleForkPolicy):
+        return
+    try:
+        fp = as_fork_policy(policy)
+    except TypeError as exc:
+        raise TypeError(
+            f"stage {stage_name!r}: expected an algebra policy "
+            f"(SingleForkPolicy / MultiForkPolicy / ForkPolicy), got {policy!r}"
+        ) from exc
+    if isinstance(fp.where, OnClass):
+        raise TypeError(
+            f"stage {stage_name!r}: OnClass placement restricts machine "
+            "classes in a fleet; DAG stage pools are homogeneous"
+        )
 
 
 def _as_distribution(dist) -> Distribution:
@@ -79,11 +98,7 @@ class StageSpec:
         # normalize once so .dist is always a Distribution afterwards
         object.__setattr__(self, "dist", _as_distribution(self.dist))
         object.__setattr__(self, "deps", tuple(self.deps))
-        if not isinstance(self.policy, SingleForkPolicy):
-            raise TypeError(
-                f"stage {self.name!r}: per-stage policies are single-fork "
-                f"(got {self.policy!r})"
-            )
+        _check_stage_policy(self.name, self.policy)
 
 
 class JobDAG:
@@ -162,8 +177,7 @@ class JobDAG:
                 f"{len(self.stages)} stages"
             )
         for s, pol in zip(self.stages, policies):
-            if not isinstance(pol, SingleForkPolicy):
-                raise TypeError(f"stage {s.name!r}: expected SingleForkPolicy, got {pol!r}")
+            _check_stage_policy(s.name, pol)
         return policies
 
     def with_policies(self, policies: Sequence[SingleForkPolicy]) -> "JobDAG":

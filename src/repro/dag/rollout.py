@@ -51,7 +51,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policy import SingleForkPolicy, num_stragglers
+from repro.core.policy import SingleForkPolicy, lower_policies, max_replicas
+from repro.core.simulate import lowered_policy_eval, policy_draws
 from repro.fleet.vector import (
     as_quantile_source,
     batched_queue,
@@ -87,13 +88,22 @@ def _plan(dag: JobDAG):
 
 
 def _compose(key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs, m_trials,
-             r_caps, kernel):
+             r_caps, kernel, modess=None, tss=None, dss=None, n_stagess=None):
     """The stage-composed core: full (cells, m, J) tensors per stage.
 
     One CRN draw pair per stage shared by every cell; stages advance in the
     DAG's validated topological order, each one masked-single-fork sampling
     + a FIFO queue on barrier-release order.  Returns per-stage readys /
     starts / finishes / T / C plus arrivals.
+
+    Two per-stage sampling programs, selected host-side (the same contract
+    as the fleet `_frontier_jit`): `modess=None` traces the historical
+    fork_draws + masked_single_fork program verbatim — the bit-identity
+    anchor for all-single-fork vectors, where kss/rss/keepss are (cells, S)
+    arrays — while algebra vectors pass per-stage lowered param tuples
+    (modess/kss/tss/rss/keepss as (cells, S_s) rows, dss as (cells,) group
+    widths, n_stagess static inner stage counts) through the general
+    `lowered_policy_eval` on the same CRN layout.
     """
     S = len(plan)
     ka, kf = jax.random.split(key)
@@ -110,12 +120,23 @@ def _compose(key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs, m_trials,
     for s in range(S):
         n_s, c_s, preds, dist_s = plan[s]
         quantile = dist_s.quantile if dist_s is not None else partial(emp_quantile, xss[s])
-        x_sorted, fresh = fork_draws(
-            stage_keys[s], quantile, (m_trials, n_jobs), n_s, r_caps[s]
-        )
-        T_s, C_s = jax.vmap(
-            lambda k, r, kp: masked_single_fork(x_sorted, fresh, k, r, kp)
-        )(kss[:, s], rss[:, s], keepss[:, s])  # each (cells, m, J)
+        if modess is None:
+            x_sorted, fresh = fork_draws(
+                stage_keys[s], quantile, (m_trials, n_jobs), n_s, r_caps[s]
+            )
+            T_s, C_s = jax.vmap(
+                lambda k, r, kp: masked_single_fork(x_sorted, fresh, k, r, kp)
+            )(kss[:, s], rss[:, s], keepss[:, s])  # each (cells, m, J)
+        else:
+            x, fresh = policy_draws(
+                stage_keys[s], quantile, (m_trials, n_jobs), n_s, r_caps[s],
+                n_stagess[s],
+            )
+            T_s, C_s = jax.vmap(
+                lambda mode, k, t, r, kp, d: lowered_policy_eval(
+                    x, fresh, mode, k, t, r, kp, d
+                )
+            )(modess[s], kss[s], tss[s], rss[s], keepss[s], dss[s])
         if preds:
             ready = finishes[preds[0]]
             for p in preds[1:]:
@@ -182,10 +203,11 @@ def _critical_attribution(arrivals, readys, finishes, plan, sinks):
 @partial(
     jax.jit,
     static_argnames=("plan", "sinks", "n_jobs", "m_trials", "r_caps", "kernel",
-                     "hist"),
+                     "hist", "n_stagess"),
 )
 def _dag_stats_jit(key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs,
-                   m_trials, r_caps, kernel, hist=None):
+                   m_trials, r_caps, kernel, hist=None, modess=None, tss=None,
+                   dss=None, n_stagess=None):
     """Grid evaluation: one stacked stats row per cell + job sojourns for
     host-side percentiles (XLA CPU sort is ~10x slower than np.partition,
     same split as the fleet frontier).  With `hist` (a static
@@ -194,7 +216,7 @@ def _dag_stats_jit(key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs,
     observability path, same layout as the fleet `_frontier_jit`."""
     arrivals, readys, starts, finishes, Ts, Cs = _compose(
         key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs, m_trials,
-        r_caps, kernel,
+        r_caps, kernel, modess=modess, tss=tss, dss=dss, n_stagess=n_stagess,
     )
     sojourn, attrs = _critical_attribution(arrivals, readys, finishes, plan, sinks)
     S = len(plan)
@@ -243,15 +265,17 @@ def _dag_stats_jit(key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs,
 
 @partial(
     jax.jit,
-    static_argnames=("plan", "sinks", "n_jobs", "m_trials", "r_caps", "kernel"),
+    static_argnames=("plan", "sinks", "n_jobs", "m_trials", "r_caps", "kernel",
+                     "n_stagess"),
 )
 def _dag_rollout_jit(key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs,
-                     m_trials, r_caps, kernel):
+                     m_trials, r_caps, kernel, modess=None, tss=None, dss=None,
+                     n_stagess=None):
     """Full-tensor variant for `dag_rollout`: every per-stage path back to
     the host (stacked on a leading stage axis), cells squeezed by caller."""
     arrivals, readys, starts, finishes, Ts, Cs = _compose(
         key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs, m_trials,
-        r_caps, kernel,
+        r_caps, kernel, modess=modess, tss=tss, dss=dss, n_stagess=n_stagess,
     )
     sojourn, attrs = _critical_attribution(arrivals, readys, finishes, plan, sinks)
     stack = lambda zs: jnp.stack(zs, axis=0)  # noqa: E731  (S, cells, m, J)
@@ -275,9 +299,42 @@ _DAG_JIT_KEYS = ("mean_sojourn", "mean_wait", "mean_service", "mean_cost",
 _DAG_STAGE_KEYS = ("share", "sojourn", "wait", "service", "cost", "rho")
 
 
+def _stage_lowerings(dag, vecs):
+    """One canonical lowering per DAG stage: row i of stage s's tensor is
+    cell i's policy for that stage (`core.policy.lower_policies`)."""
+    return [
+        lower_policies([vec[s] for vec in vecs], spec.n_tasks)
+        for s, spec in enumerate(dag.stages)
+    ]
+
+
+def _stage_pol_args(lps):
+    """(ks, rs, keeps, general_kwargs) for the fused jits from per-stage
+    lowerings.  All-single-fork grids keep the historical (cells, S) array
+    layout — the bit-identity anchor — while algebra grids ship the full
+    per-stage lowered tensors for the general evaluator."""
+    general = any(lp.multi_stage or lp.has_time or lp.has_group for lp in lps)
+    if general:
+        ks = tuple(jnp.asarray(lp.k) for lp in lps)
+        rs = tuple(jnp.asarray(lp.r) for lp in lps)
+        keeps = tuple(jnp.asarray(lp.keep) for lp in lps)
+        kwargs = dict(
+            modess=tuple(jnp.asarray(lp.mode) for lp in lps),
+            tss=tuple(jnp.asarray(lp.t) for lp in lps),
+            dss=tuple(jnp.asarray(lp.d) for lp in lps),
+            n_stagess=tuple(lp.n_stages for lp in lps),
+        )
+        return ks, rs, keeps, kwargs
+    ks = jnp.asarray(np.stack([lp.k[:, 0] for lp in lps], axis=1))
+    rs = jnp.asarray(np.stack([lp.r[:, 0] for lp in lps], axis=1))
+    keeps = jnp.asarray(np.stack([lp.keep[:, 0] for lp in lps], axis=1))
+    return ks, rs, keeps, {}
+
+
 def _resolve_r_caps(dag, cell_vectors, r_caps):
     r_max = [
-        max(vec[s].r for vec in cell_vectors) for s in range(len(dag.stages))
+        max(max_replicas(vec[s]) for vec in cell_vectors)
+        for s in range(len(dag.stages))
     ]
     if r_caps is None:
         return tuple(r + 1 for r in r_max)
@@ -324,13 +381,10 @@ def _eval_dag_cells(
     vecs = list(cell_vectors) + [cell_vectors[0]] * (n_padded - n_cells)
     lams = [float(lam) for lam in cell_lams]
     lams += [lams[0]] * (n_padded - n_cells)
-    ks = np.array(
-        [[s.n_tasks - num_stragglers(s.n_tasks, pol.p)
-          for s, pol in zip(dag.stages, vec)] for vec in vecs],
-        np.int32,
-    )
-    rs = np.array([[pol.r for pol in vec] for vec in vecs], np.int32)
-    keeps = np.array([[pol.keep for pol in vec] for vec in vecs])
+    # canonical per-stage lowering: all-single-fork grids reduce to the
+    # historical (cells, S) k/r/keep arrays (k = n - num_stragglers via the
+    # one rounding contract), algebra grids carry the general param tensors
+    ks, rs, keeps, gen_kwargs = _stage_pol_args(_stage_lowerings(dag, vecs))
 
     from repro.obs.device import HistSpec, DEFAULT_HIST, sketch_from_device
 
@@ -344,9 +398,9 @@ def _eval_dag_cells(
         raise ValueError(f'tail must be "exact", "hist", or a HistSpec, got {tail!r}')
 
     stats, payload = _dag_stats_jit(
-        key, xss, jnp.asarray(ks), jnp.asarray(rs), jnp.asarray(keeps),
+        key, xss, ks, rs, keeps,
         jnp.asarray(lams), plan, sinks, n_jobs, m_trials, r_caps, kernel,
-        hist=hist,
+        hist=hist, **gen_kwargs,
     )
     stats = np.asarray(stats)[:n_cells]
     if hist is None:
@@ -497,7 +551,7 @@ def dag_rollout(
     lam: float,
     n_jobs: int,
     m_trials: int = 32,
-    policies: Optional[Sequence[SingleForkPolicy]] = None,
+    policies: Optional[Sequence] = None,
     key=None,
     kernel: bool = False,
     r_caps=None,
@@ -519,15 +573,10 @@ def dag_rollout(
     vec = dag.validate_policy_vector(policies)
     plan, sinks, xss = _plan(dag)
     r_caps = _resolve_r_caps(dag, [vec], r_caps)
-    ks = jnp.array(
-        [[s.n_tasks - num_stragglers(s.n_tasks, p.p)
-          for s, p in zip(dag.stages, vec)]], jnp.int32,
-    )
-    rs = jnp.array([[p.r for p in vec]], jnp.int32)
-    keeps = jnp.array([[p.keep for p in vec]])
+    ks, rs, keeps, gen_kwargs = _stage_pol_args(_stage_lowerings(dag, [vec]))
     arrivals, sojourn, ready, start, finish, T, C, attr = _dag_rollout_jit(
         key, xss, ks, rs, keeps, jnp.array([float(lam)]), plan, sinks,
-        n_jobs, m_trials, r_caps, kernel,
+        n_jobs, m_trials, r_caps, kernel, **gen_kwargs,
     )
     squeeze = lambda z: z[:, 0] if z.ndim == 4 else z[0]  # noqa: E731  drop the cell axis
     return DagRolloutResult(

@@ -34,7 +34,7 @@ from __future__ import annotations
 import itertools
 from typing import Optional, Sequence
 
-from repro.core.policy import SingleForkPolicy
+from repro.core.policy import max_replicas
 
 from .graph import JobDAG
 from .rollout import dag_frontier
@@ -42,7 +42,7 @@ from .rollout import dag_frontier
 __all__ = ["best_stable", "coordinate_search", "exhaustive_search", "uniform_vectors"]
 
 
-def uniform_vectors(dag: JobDAG, candidates: Sequence[SingleForkPolicy]):
+def uniform_vectors(dag: JobDAG, candidates: Sequence):
     """The uniform slice of the product grid: the same single-stage policy
     applied to every stage — the baseline a joint search must beat."""
     return [tuple(pol for _ in dag.stages) for pol in candidates]
@@ -77,7 +77,9 @@ def best_stable(
 
 
 def _normalize_candidates(dag: JobDAG, stage_candidates) -> list[list]:
-    if stage_candidates and isinstance(stage_candidates[0], SingleForkPolicy):
+    # a flat list of policies (anything with a .label, i.e. any algebra
+    # family) is shared by every stage; per-stage lists arrive as sequences
+    if stage_candidates and hasattr(stage_candidates[0], "label"):
         stage_candidates = [list(stage_candidates)] * len(dag.stages)
     stage_candidates = [list(c) for c in stage_candidates]
     if len(stage_candidates) != len(dag.stages):
@@ -95,7 +97,7 @@ def _pinned_r_caps(stage_candidates) -> tuple:
     a search shares one draw shape: comparisons across coordinate steps
     stay common-random-number consistent and nothing recompiles as the
     evaluated vector set flexes."""
-    return tuple(max(p.r for p in cands) + 1 for cands in stage_candidates)
+    return tuple(max(max_replicas(p) for p in cands) + 1 for cands in stage_candidates)
 
 
 def exhaustive_search(
@@ -141,7 +143,7 @@ def coordinate_search(
     objective: str = "latency",
     cost_weight: float = 0.0,
     rho_max: float = 0.95,
-    init: Optional[Sequence[SingleForkPolicy]] = None,
+    init: Optional[Sequence] = None,
     max_sweeps: int = 4,
 ) -> dict:
     """Coordinate ascent over stages through the fused engine.
@@ -178,7 +180,7 @@ def coordinate_search(
         changed = False
         for s in range(len(dag.stages)):
             vectors = [
-                tuple(current[:s]) + (cand,) + tuple(current[s + 1:])
+                tuple(current[:s]) + (cand,) + tuple(current[s + 1 :])
                 for cand in stage_candidates[s]
             ]
             if current not in vectors:

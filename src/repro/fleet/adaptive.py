@@ -52,7 +52,12 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.adaptive import OnlinePolicyController
-from repro.core.policy import BASELINE, SingleForkPolicy
+from repro.core.policy import (
+    BASELINE,
+    SingleForkPolicy,
+    delayed_relaunch,
+    group_replication,
+)
 
 from . import vector
 from .workload import MachineClass
@@ -106,6 +111,13 @@ class FleetPolicyController:
     lam_cost: float = 0.1  # λ of eq. 20, applied to the *sojourn* analogue
     r_max: int = 3
     p_grid: tuple = (0.05, 0.1, 0.2, 0.3)
+    # algebra families, enumerated uniformly with the single-fork grid and
+    # scored through the same fused search (the ρ-guard applies unchanged):
+    # wall-clock relaunch triggers (delayed_relaunch) and (n, d) group
+    # widths (group_replication; widths not dividing the planned n are
+    # skipped).  Both default empty: the classic grid is the classic grid.
+    t_grid: tuple = ()
+    d_grid: tuple = ()
     window: int = 2048  # reservoir size
     recent_window: int = 256  # sliding window for the drift test
     min_samples: int = 64
@@ -260,14 +272,25 @@ class FleetPolicyController:
         self.last_ks_stat = d  # surfaced in the structured decision log
         return d > self.drift_threshold * np.sqrt((m + n) / (m * n))
 
-    def _candidates(self) -> list[SingleForkPolicy]:
-        cands = [BASELINE]
+    def _candidates(self, n: Optional[int] = None) -> list:
+        cands: list = [BASELINE]
         for p in self.p_grid:
             for keep in (True, False):
                 # π_keep(p, 0) is baseline in disguise; π_kill(p, 0) is a
                 # genuine relaunch policy, so kill starts at r = 0
                 for r in range(1 if keep else 0, self.r_max + 1):
                     cands.append(SingleForkPolicy(float(p), r, keep))
+        for t in self.t_grid:
+            for keep in (True, False):
+                for r in range(1 if keep else 0, self.r_max + 1):
+                    cands.append(delayed_relaunch(float(t), r=r, keep=keep))
+        for d in self.d_grid:
+            if n is not None and (d >= n or n % d):
+                continue  # d = n is unrestricted; d must divide n
+            for p in self.p_grid:
+                for keep in (True, False):
+                    for r in range(1 if keep else 0, self.r_max + 1):
+                        cands.append(group_replication(float(p), r, int(d), keep=keep))
         return cands
 
     def _search_geometry(self, n: int):
@@ -328,7 +351,7 @@ class FleetPolicyController:
             # and a constant shape means ONE compilation of the fused grid
             # across reservoir growth and drift flushes
             samples = self._rng.choice(samples, size=self.window, replace=True)
-        cands = self._candidates()
+        cands = self._candidates(n)
         c, classes = self._search_geometry(n)
         # r_cap pins the fused program's fresh-draw width to the grid's
         # ceiling and the candidate count pads to a fixed bucket, so every
@@ -345,6 +368,10 @@ class FleetPolicyController:
         if self._rng.random() < self.epsilon:
             if pol.is_baseline:
                 probe = SingleForkPolicy(p=self.explore_p, r=1, keep=True)
+            elif not isinstance(pol, SingleForkPolicy):
+                # r-perturbation is a single-fork move; algebra picks keep
+                # their searched parameters (the grid already spans them)
+                probe = None
             else:
                 dr = int(self._rng.choice((-1, 1)))
                 r = int(np.clip(pol.r + dr, 0, self.r_max))

@@ -24,12 +24,12 @@ import dataclasses
 from typing import Optional, Sequence
 
 from repro.core.adaptive import OnlinePolicyController
-from repro.core.policy import BASELINE, SingleForkPolicy
+from repro.core.policy import BASELINE
 
 from .adaptive import FleetPolicyController
 from .metrics import FleetStats, compute_stats
 from .scheduler import FleetScheduler, JobRecord
-from .workload import Job, MachineClass
+from .workload import Job, MachineClass, Policy
 
 __all__ = ["FleetConfig", "FleetReport", "FleetSim", "run_fleet"]
 
@@ -37,7 +37,7 @@ __all__ = ["FleetConfig", "FleetReport", "FleetSim", "run_fleet"]
 @dataclasses.dataclass
 class FleetConfig:
     capacity: Optional[int] = None  # or derive from `classes`
-    policy: SingleForkPolicy = BASELINE  # default for jobs with policy=None
+    policy: Policy = BASELINE  # default for jobs with policy=None (any algebra family)
     discipline: str = "fifo"  # or "priority"
     relaunch_delay: float = 0.0  # delayed-relaunch knob
     preempt_replicas: bool = False  # cancel speculation to admit queued work

@@ -58,8 +58,12 @@ import numpy as np
 
 from repro.core.policy import (
     BASELINE,
-    MultiForkPolicy,
+    AnySlot,
+    AtQuantile,
+    GroupSelect,
+    OnClass,
     SingleForkPolicy,
+    as_fork_policy,
     num_stragglers,
 )
 
@@ -122,10 +126,11 @@ class _Task:
 
 
 class _RunningJob:
-    def __init__(self, job: Job, t_start: float, stages, durations: np.ndarray):
+    def __init__(self, job: Job, t_start: float, plan: "_PolicyPlan", durations: np.ndarray):
         self.job = job
         self.t_start = t_start
-        self.stages = stages  # ((p, r, keep), ...) remaining fork stages
+        self.plan = plan
+        self.stages = plan.stages  # ((kind, val, r, keep), ...) in firing order
         self.next_stage = 0
         self.durations = durations  # base original-copy durations (telemetry)
         self.n_done = 0
@@ -137,25 +142,54 @@ class _RunningJob:
         self.home_class = 0  # reservation class (aligned) / first-copy class
         self.classes_used: set = set()  # class indices any copy landed on
         self.n_live = 0  # live copies (bounds replicas in aligned mode)
+        # (n, d) group selection: per-group completion counts and a fired
+        # flag per group (group forks are single-stage and independent)
+        self.group_width = plan.group_width(job.n_tasks)
+        if self.group_width is not None:
+            n_groups = job.n_tasks // self.group_width
+            self.group_done = [0] * n_groups
+            self.group_fired = [False] * n_groups
 
-    def stage_threshold(self) -> Optional[int]:
-        """n_done count that triggers the next fork stage (None = no more)."""
-        if self.next_stage >= len(self.stages):
-            return None
-        p, _, _ = self.stages[self.next_stage]
-        return self.job.n_tasks - num_stragglers(self.job.n_tasks, p)
+
+@dataclasses.dataclass(frozen=True)
+class _PolicyPlan:
+    """A policy normalized for the event engine: the same lowering contract
+    as `core.policy.lower_policies`, in event-machine form.  `stages` hold
+    ("q", p, r, keep) | ("t", t, r, keep) triggers in firing order; `d`
+    is the (n, d) group width (None = unrestricted); `klass` pins
+    placement to one machine class by name (OnClass)."""
+
+    stages: tuple
+    d: Optional[int] = None
+    klass: Optional[str] = None
+
+    def group_width(self, n_tasks: int) -> Optional[int]:
+        """Resolved group width for an n-task job (None = global forks)."""
+        if self.d is None or self.d >= n_tasks:
+            return None  # d = n is exactly the unrestricted fork
+        if n_tasks % self.d:
+            raise ValueError(
+                f"group width d={self.d} must divide n_tasks={n_tasks}"
+            )
+        return self.d
 
 
-def _normalize_stages(policy) -> tuple:
+def _policy_plan(policy) -> _PolicyPlan:
     if policy is None:
-        return ()
-    if isinstance(policy, MultiForkPolicy):
-        return tuple(policy.stages)
-    if isinstance(policy, SingleForkPolicy):
-        if policy.is_baseline:
-            return ()
-        return ((policy.p, policy.r, policy.keep),)
-    raise TypeError(f"unsupported policy {policy!r}")
+        return _PolicyPlan(stages=())
+    fp = as_fork_policy(policy)
+    stages = tuple(
+        ("q", w.p, r, keep) if isinstance(w, AtQuantile) else ("t", w.t, r, keep)
+        for w, r, keep in fp.stages
+    )
+    # drop degenerate no-op stages (keep with r=0 at a quantile is baseline)
+    stages = tuple(s for s in stages if not (s[0] == "q" and s[3] and s[2] == 0))
+    if isinstance(fp.where, GroupSelect):
+        return _PolicyPlan(stages=stages, d=fp.where.d)
+    if isinstance(fp.where, OnClass):
+        return _PolicyPlan(stages=stages, klass=fp.where.name)
+    assert isinstance(fp.where, AnySlot)
+    return _PolicyPlan(stages=stages)
 
 
 class FleetScheduler:
@@ -316,9 +350,29 @@ class FleetScheduler:
         # list order since arrivals push in time order)
         return min(self.queue, key=lambda j: j.priority)
 
+    def _class_index(self, name: str) -> int:
+        for i, k in enumerate(self.classes):
+            if k.name == name:
+                return i
+        raise ValueError(f"unknown machine class {name!r} "
+                         f"(have {[k.name for k in self.classes]})")
+
+    def _job_restrict(self, job: Job) -> Optional[int]:
+        """OnClass placement restriction for a job, as a class index.
+
+        Resolved from the job's pinned policy or the scheduler default —
+        provider-learned policies arrive after admission and cannot move a
+        job between classes, so a provider must not recommend OnClass."""
+        policy = job.policy if job.policy is not None else self.default_policy
+        klass = _policy_plan(policy).klass
+        return None if klass is None else self._class_index(klass)
+
     def _aligned_class(self, job: Job) -> Optional[int]:
         """Fastest class with a free `n_tasks` gang block (aligned mode)."""
+        restrict = self._job_restrict(job)
         for i in self._class_order:
+            if restrict is not None and i != restrict:
+                continue
             if self.classes[i].slots - self.reserved[i] >= job.n_tasks:
                 return i
         return None
@@ -326,6 +380,9 @@ class FleetScheduler:
     def _can_admit(self, job: Job) -> bool:
         if self.placement == "aligned":
             return self._aligned_class(job) is not None
+        restrict = self._job_restrict(job)
+        if restrict is not None:
+            return self.free_by_class[restrict] >= job.n_tasks
         return self.free >= job.n_tasks
 
     def _try_admit(self) -> None:
@@ -333,11 +390,13 @@ class FleetScheduler:
             job = self._next_queued()
             if job is None:
                 return
-            max_gang = (
-                max(k.slots for k in self.classes)
-                if self.placement == "aligned"
-                else self.capacity
-            )
+            restrict = self._job_restrict(job)
+            if restrict is not None:
+                max_gang = self.classes[restrict].slots
+            elif self.placement == "aligned":
+                max_gang = max(k.slots for k in self.classes)
+            else:
+                max_gang = self.capacity
             if job.n_tasks > max_gang:
                 raise RuntimeError(
                     f"job {job.job_id} needs {job.n_tasks} slots > "
@@ -400,11 +459,17 @@ class FleetScheduler:
                         cls_hint = self.classes[cls].name
                 learned = self.controller.policy_for(job, machine_class=cls_hint)
                 if learned is not None:
+                    if _policy_plan(learned).klass is not None:
+                        raise ValueError(
+                            "policy providers cannot recommend OnClass "
+                            "policies: admission already placed the job"
+                        )
                     policy = learned
-        stages = _normalize_stages(policy)
+        plan = _policy_plan(policy)
         n = job.n_tasks
         durations = np.asarray(job.dist.quantile(self.rng.random(n)), dtype=np.float64)
-        rjob = _RunningJob(job, self.now, stages, durations)
+        rjob = _RunningJob(job, self.now, plan, durations)
+        rjob.restrict = self._job_restrict(job)
         rjob.policy_label = policy.label() if hasattr(policy, "label") else "multifork"
         if self.placement == "aligned":
             cls = self._aligned_class(job)
@@ -435,6 +500,8 @@ class FleetScheduler:
             assert self.free_by_class[rjob.home_class] > 0, "reservation over-committed"
             return rjob.home_class
         for i in self._class_order:
+            if rjob.restrict is not None and i != rjob.restrict:
+                continue
             if self.free_by_class[i] > 0:
                 return i
         raise AssertionError("launch with no free slot")
@@ -489,6 +556,8 @@ class FleetScheduler:
         for c in task.live_copies:
             self._cancel_copy(rjob, c)
         rjob.n_done += 1
+        if rjob.group_width is not None:
+            rjob.group_done[task_id // rjob.group_width] += 1
         if self.controller is not None:
             # simulation knows the true original duration even when a
             # replica won (same telemetry the single-job executor reports);
@@ -502,23 +571,55 @@ class FleetScheduler:
             self._finish_job(rjob)
 
     def _maybe_schedule_fork(self, rjob: _RunningJob) -> None:
-        thr = rjob.stage_threshold()
-        if thr is None or rjob.fork_pending or rjob.n_done < thr:
+        if rjob.group_width is not None:
+            # (n, d) group selection: each d-task group forks independently
+            # at its own local quantile threshold (single-stage by contract)
+            if not rjob.stages:
+                return
+            kind, p, r, keep = rjob.stages[0]
+            d = rjob.group_width
+            thr = d - num_stragglers(d, p)
+            for g in range(len(rjob.group_done)):
+                if rjob.group_fired[g] or rjob.group_done[g] < thr:
+                    continue
+                rjob.group_fired[g] = True
+                self.heap.push(
+                    self.now + self.relaunch_delay, "fork", (rjob.job.job_id, 0, g)
+                )
             return
+        if rjob.fork_pending or rjob.next_stage >= len(rjob.stages):
+            return
+        kind, val, r, keep = rjob.stages[rjob.next_stage]
+        if kind == "q":
+            thr = rjob.job.n_tasks - num_stragglers(rjob.job.n_tasks, val)
+            if rjob.n_done < thr:
+                return
+            when = self.now + self.relaunch_delay
+        else:
+            # wall-clock trigger: fires at t after job start even with no
+            # completions; a late check (all stages due) still fires once
+            when = max(self.now, rjob.t_start + val) + self.relaunch_delay
         rjob.fork_pending = True
-        self.heap.push(
-            self.now + self.relaunch_delay, "fork", (rjob.job.job_id, rjob.next_stage)
-        )
+        self.heap.push(when, "fork", (rjob.job.job_id, rjob.next_stage, None))
 
     def _on_fork(self, ev: Event) -> None:
-        job_id, stage_idx = ev.data
+        job_id, stage_idx, group = ev.data
         rjob = self.running.get(job_id)
-        if rjob is None or stage_idx != rjob.next_stage:
-            return  # job finished during the relaunch delay, or stale stage
-        _, r, keep = rjob.stages[stage_idx]
-        rjob.next_stage += 1
-        rjob.fork_pending = False
-        stragglers = [i for i, t in enumerate(rjob.tasks) if not t.done]
+        if rjob is None:
+            return  # job finished during the relaunch delay
+        if group is not None:
+            d = rjob.group_width
+            kind, val, r, keep = rjob.stages[0]
+            stragglers = [
+                i for i in range(group * d, (group + 1) * d) if not rjob.tasks[i].done
+            ]
+        else:
+            if stage_idx != rjob.next_stage:
+                return  # stale stage (a newer trigger superseded this one)
+            kind, val, r, keep = rjob.stages[stage_idx]
+            rjob.next_stage += 1
+            rjob.fork_pending = False
+            stragglers = [i for i, t in enumerate(rjob.tasks) if not t.done]
         rec = self._rec()
         if rec.enabled:
             rec.instant("fork", "scheduler", self.now, pid=self.obs_pid,
@@ -535,6 +636,8 @@ class FleetScheduler:
             if self.placement == "aligned":
                 # replicas draw from the job's own gang reservation only
                 budget = rjob.job.n_tasks - rjob.n_live
+            elif rjob.restrict is not None:
+                budget = self.free_by_class[rjob.restrict]
             else:
                 budget = self.free
             n_fresh = min(want, budget)
@@ -542,8 +645,8 @@ class FleetScheduler:
                 fresh = np.asarray(
                     rjob.job.dist.quantile(self.rng.random(n_fresh)), dtype=np.float64
                 )
-                for d in fresh:
-                    self._launch_copy(rjob, i, float(d) + self.fork_overhead, fresh=True)
+                for dur in fresh:
+                    self._launch_copy(rjob, i, float(dur) + self.fork_overhead, fresh=True)
             if not task.live_copies:
                 # killed with zero slots anywhere (can't happen: the kill
                 # freed one) — guard so a task is never silently lost

@@ -69,8 +69,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.distributions import Distribution, Empirical
-from repro.core.policy import SingleForkPolicy, num_stragglers
-from repro.core.simulate import single_fork_batch
+from repro.core.policy import SingleForkPolicy, lower_policies, num_stragglers
+from repro.core.simulate import lowered_policy_eval, policy_draws, single_fork_batch
 
 from .workload import MachineClass
 
@@ -532,22 +532,27 @@ _FRONTIER_JIT_KEYS = (
 
 @partial(
     jax.jit,
-    static_argnames=("dist", "n", "n_jobs", "m_trials", "r_cap", "kernel", "hist"),
+    static_argnames=(
+        "dist", "n", "n_jobs", "m_trials", "r_cap", "n_stages", "kernel", "hist",
+    ),
 )
 def _frontier_jit(
-    key, xs, ks, rs, keeps, lams, speeds, slot_class, class_slots,
-    dist, n, n_jobs, m_trials, r_cap, kernel, hist=None,
+    key, xs, modes, ks, ts, rs, keeps, ds, lams, speeds, slot_class, class_slots,
+    dist, n, n_jobs, m_trials, r_cap, n_stages, kernel, hist=None,
 ):
     """Evaluate EVERY (policy, λ) cell on one shared set of random draws.
 
-    (k, r, keep, λ) are per-cell *dynamic* vectors — the fork point enters
-    via masks instead of shapes, λ scales one shared exponential
-    inter-arrival draw — so the whole grid vmaps into a single device
-    program: one compile covers any same-sized grid (and, on the empirical
-    path, any reservoir content).  Sharing the draws across cells is
-    common-random-numbers variance reduction: frontier orderings and the
-    argmin over candidates are far sharper than independent rollouts of
-    equal size.
+    The per-cell policy params are the LOWERED tensor rows from
+    `core.policy.lower_policies` — (mode, k, t, r, keep) per stage plus the
+    group width d — all *dynamic* vectors: the fork trigger enters via
+    masks instead of shapes, λ scales one shared exponential inter-arrival
+    draw, so a grid mixing any policy families (single-fork, delayed
+    relaunch, (n, d) groups, multi-stage schedules) vmaps into a single
+    device program and one compile covers any same-shaped grid (and, on
+    the empirical path, any reservoir content).  Sharing the draws across
+    cells is common-random-numbers variance reduction: frontier orderings
+    and the argmin over candidates are far sharper than independent
+    rollouts of equal size.
 
     `hist` (static, a `repro.obs.HistSpec`) switches the off-device tail
     payload: instead of the raw per-cell sojourn matrices (cells × m × J
@@ -557,14 +562,31 @@ def _frontier_jit(
     """
     ka, kf = jax.random.split(key)
     quantile = dist.quantile if dist is not None else partial(emp_quantile, xs)
-    x_sorted, fresh = fork_draws(kf, quantile, (m_trials, n_jobs), n, r_cap)
-    expo_cum = jnp.cumsum(jax.random.exponential(ka, (m_trials, n_jobs)), axis=1)
+    if modes is None:
+        # the whole grid lowered into the single-stage-quantile/full-width
+        # domain (every SingleForkPolicy grid does): trace the HISTORICAL
+        # program verbatim — identical HLO means identical floats, which is
+        # the bit-identity contract the bench gate pins.  Co-compiling the
+        # general evaluator perturbs XLA fusion of this very expression by
+        # ~1 ulp, so the selection must happen host-side, not via jnp.where.
+        x_sorted, fresh = fork_draws(kf, quantile, (m_trials, n_jobs), n, r_cap)
+        expo_cum = jnp.cumsum(jax.random.exponential(ka, (m_trials, n_jobs)), axis=1)
 
-    def tc(k, r, keep, lam):
-        T, C = masked_single_fork(x_sorted, fresh, k, r, keep)
-        return expo_cum / lam, T, C
+        def tc(k, r, keep, lam):
+            T, C = masked_single_fork(x_sorted, fresh, k, r, keep)
+            return expo_cum / lam, T, C
 
-    arrivals, T, C = jax.vmap(tc)(ks, rs, keeps, lams)  # each (cells, m, J)
+        arrivals, T, C = jax.vmap(tc)(ks, rs, keeps, lams)  # each (cells, m, J)
+    else:
+        x, fresh = policy_draws(kf, quantile, (m_trials, n_jobs), n, r_cap, n_stages)
+        expo_cum = jnp.cumsum(jax.random.exponential(ka, (m_trials, n_jobs)), axis=1)
+
+        def tc(mode, k, t, r, keep, d, lam):
+            T, C = lowered_policy_eval(x, fresh, mode, k, t, r, keep, d)
+            return expo_cum / lam, T, C
+
+        # each (cells, m, J)
+        arrivals, T, C = jax.vmap(tc)(modes, ks, ts, rs, keeps, ds, lams)
 
     c = speeds.shape[0]
     starts, fins, svc, slots = batched_queue(arrivals, T, speeds, kernel=kernel)
@@ -666,7 +688,7 @@ def cell_bucket(n_cells: int) -> int:
 
 def _eval_cells(
     dist_or_samples,
-    cell_policies: Sequence[SingleForkPolicy],
+    cell_policies: Sequence,
     cell_lams: Sequence[float],
     n: int,
     n_jobs: int,
@@ -698,20 +720,26 @@ def _eval_cells(
     slot = _slot_arrays(n, c, classes)
     speeds, slot_class, class_slots, names = slot if slot is not None else _c1_slot_arrays(n)
 
-    r_max = max(pol.r for pol in cell_policies)
+    n_cells = len(cell_policies)
+    n_padded = cell_bucket(n_cells) if pad_cells else n_cells
+    # lower the (padded) grid to the canonical fixed-width param tensor:
+    # the fork indices, wall-clock triggers, replica counts and group
+    # widths all derive from the one rounding contract in core.policy
+    padded = list(cell_policies) + [cell_policies[0]] * (n_padded - n_cells)
+    lowered = lower_policies(padded, n)
+    if any(name is not None for name in lowered.class_names):
+        raise ValueError(
+            "class-restricted (OnClass) placement changes queue geometry, "
+            "not the single-job law — model the class mix via `classes=` "
+            "or use the event engine (FleetSim)"
+        )
+    r_max = lowered.r_max
     if r_cap is None:
         r_cap = r_max + 1
     elif r_cap < r_max + 1:
         raise ValueError(f"r_cap={r_cap} < r_max+1={r_max + 1}")
-
-    n_cells = len(cell_policies)
-    n_padded = cell_bucket(n_cells) if pad_cells else n_cells
-    ks = [n - num_stragglers(n, pol.p) for pol in cell_policies]
-    rs = [pol.r for pol in cell_policies]
-    keeps = [pol.keep for pol in cell_policies]
     lams = [float(lam) for lam in cell_lams]
-    for lst, fill in ((ks, ks[0]), (rs, rs[0]), (keeps, keeps[0]), (lams, lams[0])):
-        lst.extend([fill] * (n_padded - n_cells))
+    lams.extend([lams[0]] * (n_padded - n_cells))
 
     from repro.obs.device import HistSpec, DEFAULT_HIST, sketch_from_device
 
@@ -731,11 +759,26 @@ def _eval_cells(
         import time as _time
 
         t0 = _time.perf_counter()
+    # grids entirely in the single-stage-quantile/full-width domain take the
+    # historical program (modes=None → bit-identical HLO to the pre-algebra
+    # engine); anything else takes the general lowered evaluator.  Either
+    # way the whole mixed grid is ONE dispatch.
+    general = lowered.multi_stage or lowered.has_time or lowered.has_group
+    if general:
+        pol_args = (
+            jnp.asarray(lowered.mode), jnp.asarray(lowered.k),
+            jnp.asarray(lowered.t), jnp.asarray(lowered.r),
+            jnp.asarray(lowered.keep), jnp.asarray(lowered.d),
+        )
+    else:
+        pol_args = (
+            None, jnp.asarray(lowered.k[:, 0]), None,
+            jnp.asarray(lowered.r[:, 0]), jnp.asarray(lowered.keep[:, 0]), None,
+        )
     stats, payload = _frontier_jit(
-        key, xs,
-        jnp.array(ks, jnp.int32), jnp.array(rs, jnp.int32), jnp.array(keeps),
+        key, xs, *pol_args,
         jnp.array(lams), speeds, slot_class, class_slots,
-        dist, n, n_jobs, m_trials, r_cap, kernel, hist=hist,
+        dist, n, n_jobs, m_trials, r_cap, lowered.n_stages, kernel, hist=hist,
     )
     if rec.enabled:
         jax.block_until_ready((stats, payload))
@@ -780,7 +823,7 @@ def _eval_cells(
 
 def frontier(
     dist_or_samples,
-    policies: Sequence[SingleForkPolicy],
+    policies: Sequence,
     lams,
     n: int,
     n_jobs: int,
@@ -802,10 +845,18 @@ def frontier(
     `_SUMMARY_KEYS` plus `rho` / `rho_work` / `rho_block` saturation
     estimates and per-class `util_*` when c > 1 or classes are given.
 
-    One compilation covers any same-shaped grid: λ and (p, r, keep) are
-    traced per-cell vectors, cell counts are padded to power-of-two buckets
-    (`pad_cells`), and `r_cap` pins the fresh-draw width (pass the largest
-    r you will ever search, e.g. the adaptive controller's `r_max + 1`).
+    `policies` may mix ANY algebra families — `SingleForkPolicy`,
+    `MultiForkPolicy`, and `ForkPolicy` points such as `delayed_relaunch`
+    or `group_replication` — in one grid: each lowers to a row of the
+    canonical param tensor (`core.policy.lower_policies`) and the whole
+    mixed grid is still one dispatch.  Single-fork cells are bit-identical
+    to the historical single-fork-only path on the same key.
+
+    One compilation covers any same-shaped grid: λ and the lowered policy
+    params are traced per-cell vectors, cell counts are padded to
+    power-of-two buckets (`pad_cells`), and `r_cap` pins the fresh-draw
+    width (pass the largest r you will ever search, e.g. the adaptive
+    controller's `r_max + 1`).
     `kernel=True` routes the queue recursions through the Pallas
     `kernels.kw_queue` kernel, (trials × cells) tiled across its grid.
     `tail="hist"` computes the percentile keys from in-program γ-bucket
@@ -890,7 +941,7 @@ def sweep_loop(
 
 def policy_search(
     samples,
-    candidates: Sequence[SingleForkPolicy],
+    candidates: Sequence,
     lam: float,
     n: int,
     n_jobs: int = 192,

@@ -39,7 +39,7 @@ from typing import Optional, Sequence, Union
 import numpy as np
 
 from repro.core.distributions import Distribution, Empirical
-from repro.core.policy import MultiForkPolicy, SingleForkPolicy
+from repro.core.policy import ForkPolicy, MultiForkPolicy, SingleForkPolicy
 
 __all__ = [
     "Job",
@@ -52,7 +52,8 @@ __all__ = [
     "diurnal_workload",
 ]
 
-Policy = Union[SingleForkPolicy, MultiForkPolicy]
+#: any algebra policy the engines accept (see core.policy.as_fork_policy)
+Policy = Union[SingleForkPolicy, MultiForkPolicy, ForkPolicy]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -17,7 +17,7 @@ import re
 from collections import defaultdict
 
 _OP_RE = re.compile(r"=\s+([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+([a-z0-9_-]+)")
-from repro.launch.dryrun import _DTYPE_BYTES, _shape_bytes
+from repro.launch.dryrun import _shape_bytes
 
 
 def profile_hlo(hlo_text: str, scan_factor: float = 1.0) -> dict:

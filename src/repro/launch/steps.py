@@ -8,7 +8,6 @@ by both the dry-run (AOT, ShapeDtypeStructs) and the real driver.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

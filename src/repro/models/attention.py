@@ -13,7 +13,6 @@ All softmax math in fp32.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ Logical axis vocabulary (resolved per-mesh, with divisibility fallback):
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 

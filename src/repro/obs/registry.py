@@ -10,7 +10,7 @@ fleet-wide view with `MetricsRegistry.merge`.
 
 from __future__ import annotations
 
-from typing import Mapping, Optional, Sequence
+from typing import Mapping, Optional
 
 from .sketch import QuantileSketch
 

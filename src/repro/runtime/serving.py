@@ -29,7 +29,7 @@ from repro.obs.registry import MetricsRegistry
 from repro.obs.sketch import QuantileSketch
 
 from .cluster import SimCluster
-from .executor import ExecutionReport, SpeculativeExecutor
+from .executor import SpeculativeExecutor
 
 
 @dataclasses.dataclass
@@ -114,7 +114,7 @@ class FleetHedgedServer:
         capacity: Optional[int] = None,
         latency_dist=None,
         serve_fn: Callable[[object], object] = None,
-        policy: Optional[SingleForkPolicy] = None,
+        policy=None,  # any algebra policy; None -> hedged default
         adapt: bool = True,
         adapt_mode: str = "fleet",
         preempt_replicas: Optional[bool] = None,
@@ -130,6 +130,12 @@ class FleetHedgedServer:
         mode — "aligned" reserves a one-class gang block per batch, which
         is the regime the vectorized planner (`repro.fleet.vector`) models,
         so capacity decisions simulated there transfer directly.
+
+        `policy` accepts ANY algebra policy (`core.policy`): single-fork,
+        multi-fork schedules, `delayed_relaunch(t)` wall-clock hedging,
+        `group_replication(p, r, d)` group selection, or `on_class(...)`
+        pinning batches to one replica class — the backing fleet engine
+        executes all families natively.
 
         With `adapt=True` the hedging policy is closed-loop:
         `adapt_mode="fleet"` (default) uses the load-aware

@@ -25,7 +25,6 @@ identical (the first-copy-wins soundness argument).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Optional
 
 import jax
@@ -37,7 +36,7 @@ from repro.core.adaptive import OnlinePolicyController
 from repro.core.policy import SingleForkPolicy
 
 from .cluster import SimCluster
-from .executor import ExecutionReport, SpeculativeExecutor
+from .executor import SpeculativeExecutor
 
 
 @dataclasses.dataclass

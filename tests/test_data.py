@@ -1,7 +1,6 @@
 """Data pipeline determinism + trace synthesis properties."""
 
 import numpy as np
-import pytest
 
 from repro.configs import get_reduced
 from repro.data import SyntheticTokenPipeline, synthesize_trace

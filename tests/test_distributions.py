@@ -1,6 +1,5 @@
 """Distribution quintet correctness + hypothesis round-trips."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

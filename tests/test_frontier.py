@@ -146,11 +146,7 @@ def test_policy_search_is_the_frontier_engine_at_one_lambda():
 def test_masked_single_fork_matches_static_sampler():
     """Dynamic-fork-point semantics ≡ `single_fork_batch` on shared draws
     (the quantile-transform route, analytic distribution)."""
-    from functools import partial
-
     import jax.numpy as jnp
-
-    from repro.core.simulate import single_fork_batch
 
     n, s, r = 10, 3, 2
     key = jax.random.PRNGKey(10)
@@ -163,7 +159,7 @@ def test_masked_single_fork_matches_static_sampler():
         # masked path consumes an (n, r_cap) fresh block; place the static
         # draws in the straggler rows (iota >= k) it actually reads
         fresh = jnp.zeros((64, n, r + 1))
-        fresh = fresh.at[:, n - s:, :].set(fresh_static)
+        fresh = fresh.at[:, n - s :, :].set(fresh_static)
         T_dyn, C_dyn = vector.masked_single_fork(
             x_sorted, fresh, jnp.int32(n - s), jnp.int32(r), keep
         )

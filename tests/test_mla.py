@@ -4,7 +4,6 @@ latent-cache geometry."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.common import Tape
 from repro.models.mla import MLASpec, init_mla, mla_decode, mla_full

@@ -39,7 +39,6 @@ from repro.obs import (
     kernel_profile,
     load_chrome_trace,
     sketch_from_device,
-    to_chrome_trace,
     write_chrome_trace,
 )
 from repro.obs import trace as obs_trace

@@ -1,0 +1,468 @@
+"""The policy algebra (DESIGN.md §14): lowering contracts, cross-family
+equivalences, and engine agreement.
+
+The load-bearing claims, each pinned here:
+
+  * the rounding contract — every engine's fork index derives from the ONE
+    `num_stragglers` helper (round half up, >= 1 straggler for p > 0);
+  * algebra-lowered single-fork is `single_fork_batch` DRAW FOR DRAW (the
+    straggler-row-injection idiom of test_frontier.py), and algebra
+    quantile cells in `frontier` are BITWISE the pre-algebra fused path;
+  * delayed relaunch at t=0 (kill) is the fork-at-start clone attack,
+    (n, d) selection with d = n is exactly the unrestricted fork, d < n
+    matches an independent numpy per-group reference;
+  * the event engine realizes the same semantics as the fused evaluator
+    (5 sigma) for time-triggered forks and group selection;
+  * nothing downstream special-cases a family: adaptive grids, the DAG
+    engines, and the hedged server all take any algebra policy.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ShiftedExp
+from repro.core.policy import (
+    MODE_INACTIVE,
+    MODE_QUANTILE,
+    MODE_TIME,
+    AtQuantile,
+    AtTime,
+    ForkPolicy,
+    GroupSelect,
+    MultiForkPolicy,
+    SingleForkPolicy,
+    as_fork_policy,
+    delayed_relaunch,
+    fork_index,
+    group_replication,
+    lower_policies,
+    max_replicas,
+    num_stragglers,
+    on_class,
+)
+from repro.core.simulate import (
+    lowered_policy_eval,
+    policy_draws,
+    simulate,
+    simulate_multifork,
+    single_fork_batch,
+)
+from repro.fleet import (
+    FleetConfig,
+    FleetSim,
+    MachineClass,
+    poisson_workload,
+    vector,
+)
+from repro.fleet.adaptive import FleetPolicyController
+
+DIST = ShiftedExp(1.0, 1.0)
+
+
+# ------------------------------------------------- the rounding contract
+
+
+def test_num_stragglers_rounding_contract_all_n_up_to_64():
+    """Round half UP, at least 1 straggler for p > 0, never the whole job;
+    the lowered fork index k agrees with the helper for every (n, p) —
+    the fused path reads k from `lower_policies`, so host and device can
+    only ever disagree if this test does."""
+    for n in range(2, 65):
+        assert num_stragglers(n, 0.0) == 0
+        for p in np.linspace(0.01, 0.99, 99):
+            s = num_stragglers(n, float(p))
+            assert s == max(1, min(n - 1, int(math.floor(p * n + 0.5))))
+            assert 1 <= s <= n - 1
+            assert fork_index(n, float(p)) == n - s
+            lp = lower_policies([SingleForkPolicy(float(p), 1, True)], n)
+            assert int(lp.k[0, 0]) == fork_index(n, float(p))
+    # the known half-up witnesses: p*n = 2.5 rounds to 3, not 2
+    assert num_stragglers(10, 0.25) == 3
+    assert num_stragglers(4, 0.1) == 1  # floor(0.4 + 0.5) = 0, clamped up
+
+
+def test_lowering_tensor_encoding():
+    """One mixed-family grid -> one fixed-width tensor, the documented way."""
+    n = 8
+    grid = [
+        SingleForkPolicy(0.0, 0, True),
+        SingleForkPolicy(0.2, 1, False),
+        delayed_relaunch(3.0),
+        group_replication(0.25, 2, 4),
+        MultiForkPolicy(((0.4, 1, True), (0.1, 2, False))),
+    ]
+    lp = lower_policies(grid, n)
+    assert lp.n_stages == 2 and lp.r_max == 2
+    assert lp.multi_stage and lp.has_time and lp.has_group
+    # baseline: an active quantile stage with k = width (zero stragglers)
+    assert lp.mode[0, 0] == MODE_QUANTILE and lp.k[0, 0] == n
+    assert lp.mode[0, 1] == MODE_INACTIVE
+    # classic single fork
+    assert lp.k[1, 0] == fork_index(n, 0.2) and not lp.keep[1, 0]
+    # delayed relaunch: time mode, t on stage 0, +inf padding elsewhere
+    assert lp.mode[2, 0] == MODE_TIME and lp.t[2, 0] == 3.0
+    assert np.isinf(lp.t[2, 1])
+    # group selection: k is WITHIN the group width d
+    assert lp.d[3] == 4 and lp.k[3, 0] == fork_index(4, 0.25)
+    # multi-fork schedule: two active quantile stages
+    assert lp.k[4, 0] == fork_index(n, 0.4) and lp.k[4, 1] == fork_index(n, 0.1)
+    assert lp.keep[4, 0] and not lp.keep[4, 1]
+    assert all(c is None for c in lp.class_names)
+    # d = n lowers as NON-group (the legacy bit-exact program applies)
+    assert not lower_policies([group_replication(0.2, 1, n)], n).has_group
+    with pytest.raises(ValueError, match="divide"):
+        lower_policies([group_replication(0.2, 1, 3)], n)
+
+
+# ------------------------- algebra-lowered single fork, draw for draw
+
+
+@pytest.mark.parametrize("keep", [True, False], ids=["keep", "kill"])
+def test_lowered_eval_matches_single_fork_batch_draw_for_draw(keep):
+    """`single_fork_batch`'s own draws, placed in the lowered layout's
+    straggler rows, reproduce its (T, C) exactly — not statistically."""
+    n, s, r, m = 10, 3, 2, 64
+    key = jax.random.PRNGKey(10)
+    T_ref, C_ref = single_fork_batch(key, DIST, n, s, r, keep, (m,))
+    # identical bits: same key split, same sample shapes
+    kx, ky = jax.random.split(key)
+    x = DIST.sample(kx, (m, n))
+    fresh_static = DIST.sample(ky, (m, s, r + 1))
+    fresh = jnp.zeros((m, 1, n, r + 1)).at[:, 0, n - s :, :].set(fresh_static)
+    T, C = lowered_policy_eval(
+        x,
+        fresh,
+        jnp.array([MODE_QUANTILE], jnp.int32),
+        jnp.array([n - s], jnp.int32),
+        jnp.array([jnp.inf], jnp.float32),
+        jnp.array([r], jnp.int32),
+        jnp.array([keep]),
+        jnp.int32(n),
+    )
+    np.testing.assert_allclose(np.asarray(T), np.asarray(T_ref), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(C_ref), rtol=1e-6)
+
+
+def test_lowered_eval_baseline_draw_for_draw():
+    """Baseline consumes only the x block: exact match with no injection."""
+    n, m = 10, 64
+    key = jax.random.PRNGKey(11)
+    T_ref, C_ref = single_fork_batch(key, DIST, n, 0, 0, True, (m,))
+    x = DIST.sample(jax.random.split(key)[0], (m, n))
+    T, C = lowered_policy_eval(
+        x,
+        jnp.zeros((m, 1, n, 1)),
+        jnp.array([MODE_QUANTILE], jnp.int32),
+        jnp.array([n], jnp.int32),
+        jnp.array([jnp.inf], jnp.float32),
+        jnp.array([0], jnp.int32),
+        jnp.array([True]),
+        jnp.int32(n),
+    )
+    np.testing.assert_allclose(np.asarray(T), np.asarray(T_ref), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(C_ref), rtol=1e-6)
+
+
+def test_frontier_algebra_quantile_cells_bitwise_match_single_fork():
+    """Algebra-lowered baseline / quantile / d=n-group cells run the
+    HISTORICAL fused program: floats identical to `SingleForkPolicy` cells,
+    not approximately equal."""
+    n, lams = 8, (0.08, 0.16)
+    classic = (
+        SingleForkPolicy(0.0, 0, True),
+        SingleForkPolicy(0.1, 1, True),
+        SingleForkPolicy(0.2, 1, True),
+    )
+    algebra = (
+        ForkPolicy(when=()),
+        ForkPolicy(when=AtQuantile(0.1), how_many=1, keep=True),
+        group_replication(0.2, 1, n),  # d = n: unrestricted, bit for bit
+    )
+    key = jax.random.PRNGKey(21)
+    a = vector.frontier(DIST, classic, lams, n, 200, m_trials=16, key=key)
+    b = vector.frontier(DIST, algebra, lams, n, 200, m_trials=16, key=key)
+    assert len(a) == len(b) == len(classic) * len(lams)
+    for ra, rb in zip(a, b):
+        for field in ("mean_sojourn", "mean_cost", "mean_wait", "p50", "p99"):
+            assert ra[field] == rb[field], field
+
+
+def test_simulate_algebra_quantile_matches_single_fork_stat():
+    """`simulate` routes ForkPolicy through the lowered evaluator; the
+    historical per-trial sampler draws differently, so agreement here is
+    statistical (5 sigma) — the bitwise claim lives in the frontier test."""
+    pol_a = ForkPolicy(when=AtQuantile(0.2), how_many=1, keep=False)
+    pol_c = SingleForkPolicy(0.2, 1, False)
+    a = simulate(DIST, pol_a, n=8, m=4000, key=jax.random.PRNGKey(1))
+    c = simulate(DIST, pol_c, n=8, m=4000, key=jax.random.PRNGKey(2))
+    se = float(np.hypot(a.latency_std_err, c.latency_std_err))
+    assert abs(a.mean_latency - c.mean_latency) < 5 * se + 0.01
+    assert abs(a.mean_cost - c.mean_cost) < 5 * float(
+        np.hypot(a.cost_std_err, c.cost_std_err)
+    ) + 0.01
+
+
+# ----------------------------------------- the related-work equivalences
+
+
+def test_delayed_relaunch_t0_kill_is_the_clone_attack():
+    """t=0 kill: every task killed at start, r+1 fresh copies each —
+    T = max_i min(fresh_i), C = (r+1)/n * sum_i min(fresh_i), exactly."""
+    n, r, m = 6, 1, 256
+    key = jax.random.PRNGKey(5)
+    res = simulate(DIST, delayed_relaunch(0.0, r=r, keep=False), n=n, m=m, key=key)
+    # same draws the lowered path consumes (r_cap = r_max + 1)
+    _, fresh = policy_draws(key, DIST.quantile, (m,), n, r + 1, 1)
+    y = np.asarray(jnp.min(fresh[:, 0, :, :], axis=-1))
+    np.testing.assert_allclose(np.asarray(res.latency), y.max(axis=-1), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(res.cost), (r + 1) * y.sum(axis=-1) / n, rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize("keep", [True, False], ids=["keep", "kill"])
+def test_group_replication_matches_numpy_reference(keep):
+    """(n, d) with d < n against an independent numpy per-group reference:
+    each group forks at its OWN k-th finish and replicates only its own
+    stragglers; cost is exact cohort accounting."""
+    n, d, p, r, m = 8, 4, 0.3, 1, 128
+    key = jax.random.PRNGKey(6)
+    res = simulate(DIST, group_replication(p, r, d, keep=keep), n=n, m=m, key=key)
+    x, fresh = policy_draws(key, DIST.quantile, (m,), n, r + 1, 1)
+    xn, fn = np.asarray(x), np.asarray(fresh)[:, 0]  # (m, n), (m, n, r+1)
+    k = fork_index(d, p)
+    gid = np.arange(n) // d
+    pos = np.arange(n) % d
+    base = gid * d
+    # group-blocked sort: by finish time, then stably by group id
+    o1 = np.argsort(xn, axis=-1, kind="stable")
+    o2 = np.argsort(gid[o1], axis=-1, kind="stable")
+    perm = np.take_along_axis(o1, o2, axis=-1)
+    f_p = np.take_along_axis(xn, perm, axis=-1)
+    tau = np.take_along_axis(f_p, np.broadcast_to(base + k - 1, f_p.shape), axis=-1)
+    strag = pos >= k
+    if keep:
+        y = np.minimum(f_p - tau, fn[..., :r].min(axis=-1))
+    else:
+        y = fn.min(axis=-1)
+    finish = np.where(strag, tau + y, f_p)
+    # per straggler the original runs to tau (kill) or tau+y (keep) and the
+    # fresh cohort bills r (keep) / r+1 (kill) copies from tau: both cases
+    # total tau + (r+1)*y
+    cost = (
+        np.where(strag, tau + (r + 1) * y, f_p).sum(axis=-1) / n
+    )
+    np.testing.assert_allclose(np.asarray(res.latency), finish.max(axis=-1), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(res.cost), cost, rtol=1e-5)
+
+
+def test_multifork_lowered_matches_event_accurate_simulator():
+    """MultiForkPolicy through the fused tensor evaluator vs the original
+    event-accurate `simulate_multifork`, independent draws, 5 sigma."""
+    pol = MultiForkPolicy(((0.4, 1, True), (0.1, 1, False)))
+    a = simulate(DIST, pol, n=8, m=4000, key=jax.random.PRNGKey(3))
+    b = simulate_multifork(DIST, pol, n=8, m=4000, key=jax.random.PRNGKey(4))
+    se = float(np.hypot(a.latency_std_err, b.latency_std_err))
+    assert abs(a.mean_latency - b.mean_latency) < 5 * se + 0.01
+    se_c = float(np.hypot(a.cost_std_err, b.cost_std_err))
+    assert abs(a.mean_cost - b.mean_cost) < 5 * se_c + 0.01
+
+
+# ------------------------------------------- event engine vs fused sweep
+
+
+@pytest.mark.parametrize(
+    "policy",
+    [
+        delayed_relaunch(4.0),
+        group_replication(0.2, 1, 5),
+        delayed_relaunch(3.0, r=1, keep=True),
+    ],
+    ids=["relaunch-kill", "group-d5", "relaunch-keep"],
+)
+@pytest.mark.slow
+def test_event_engine_agrees_with_fused_algebra_families(policy):
+    """capacity == n makes the event engine the gang-serial queue the fused
+    sweep models; time-triggered forks and group selection must agree
+    within combined MC error — the same harness as the single-fork test."""
+    n, n_jobs, lam = 10, 150, 0.15
+    soj, cost = [], []
+    for seed in range(6):
+        jobs = poisson_workload(n_jobs, rate=lam, n_tasks=n, dist=DIST, seed=seed)
+        rep = FleetSim(FleetConfig(capacity=n, policy=policy, seed=seed)).run(jobs)
+        soj.append(rep.stats.mean_sojourn)
+        cost.append(rep.stats.mean_cost)
+    row = vector.frontier(DIST, (policy,), (lam,), n, n_jobs, m_trials=32)[0]
+    se = float(np.hypot(np.std(soj) / np.sqrt(len(soj)), row["sojourn_std_err"]))
+    assert abs(np.mean(soj) - row["mean_sojourn"]) < 5 * se + 0.05
+    assert abs(np.mean(cost) - row["mean_cost"]) < 0.1
+
+
+def test_frontier_mixed_family_grid_is_one_dispatch():
+    """A grid mixing every family evaluates in one fused dispatch and
+    labels rows by family."""
+    n = 8
+    grid = (
+        SingleForkPolicy(0.2, 1, True),
+        delayed_relaunch(2.0),
+        group_replication(0.3, 1, 4),
+        MultiForkPolicy(((0.4, 1, True), (0.1, 1, False))),
+    )
+    rows = vector.frontier(
+        DIST, grid, (0.1,), n, 100, m_trials=8, key=jax.random.PRNGKey(7)
+    )
+    assert [r["policy"] for r in rows] == [p.label() for p in grid]
+    for r in rows:
+        assert np.isfinite(r["mean_sojourn"]) and np.isfinite(r["mean_cost"])
+        assert r["mean_sojourn"] > 0 and r["mean_cost"] > 0
+
+
+# ------------------------------------- nothing special-cases a family
+
+
+def test_adaptive_grids_enumerate_families_uniformly():
+    ctl = FleetPolicyController(t_grid=(3.0,), d_grid=(5,), r_max=1)
+    labels = {c.label() for c in ctl._candidates(10)}
+    assert "pi_keep(p=0.05, r=1)" in labels  # classic grid intact
+    assert "pi(t=3,r=0,kill)" in labels
+    assert "pi(t=3,r=1,keep)" in labels
+    assert any(lbl.endswith("@d5") for lbl in labels)
+    # widths that don't divide the planned n are skipped, not crashed on
+    assert not any(
+        lbl.endswith("@d5") for lbl in {c.label() for c in ctl._candidates(8)}
+    )
+
+
+def test_onclass_is_queue_geometry_not_sampling():
+    pinned = on_class(SingleForkPolicy(0.2, 1, True), "slow")
+    assert pinned.label() == "pi(p=0.2,r=1,keep)@class:slow"
+    with pytest.raises(ValueError, match="placement"):
+        on_class(pinned, "fast")
+    with pytest.raises(ValueError, match="OnClass"):
+        simulate(DIST, pinned, n=8, m=16)
+    with pytest.raises(ValueError, match="OnClass"):
+        vector.frontier(DIST, (pinned,), (0.1,), 8, 50, m_trials=2)
+
+
+def test_event_engine_honors_onclass_placement():
+    """Jobs pinned to the slow class never touch the fast pool."""
+    classes = (MachineClass("fast", 10, 1.0), MachineClass("slow", 10, 0.5))
+    pinned = on_class(SingleForkPolicy(0.2, 1, True), "slow")
+    jobs = poisson_workload(40, rate=0.2, n_tasks=5, dist=DIST, seed=3, policy=pinned)
+    rep = FleetSim(FleetConfig(classes=classes, seed=3)).run(jobs)
+    assert len(rep.records) == 40
+    assert rep.stats.class_utilization["fast"] == 0.0
+    assert rep.stats.class_utilization["slow"] > 0.0
+    unknown = on_class(SingleForkPolicy(0.2, 1, True), "tpu")
+    bad = poisson_workload(4, rate=0.2, n_tasks=5, dist=DIST, seed=3, policy=unknown)
+    with pytest.raises(ValueError, match="unknown machine class"):
+        FleetSim(FleetConfig(classes=classes, seed=3)).run(bad)
+
+
+@pytest.mark.parametrize(
+    "policy",
+    [delayed_relaunch(0.5, r=1, keep=True), group_replication(0.25, 1, 4)],
+    ids=["relaunch", "group"],
+)
+def test_fleet_hedged_server_accepts_algebra_policies(policy):
+    from repro.runtime.serving import FleetHedgedServer
+
+    srv = FleetHedgedServer(
+        capacity=24,
+        latency_dist=ShiftedExp(0.01, 20.0),
+        serve_fn=lambda r: r * 3,
+        policy=policy,
+        adapt=False,
+        seed=1,
+    )
+    batches = [list(range(i, i + 8)) for i in range(5)]
+    outcomes, stats = srv.serve_stream(batches, rate=5.0, seed=2)
+    assert [o.values for o in outcomes] == [[3 * r for r in b] for b in batches]
+    assert stats.n_jobs == 5
+    for o in outcomes:
+        assert o.finish >= o.start >= o.arrival
+
+
+def test_dag_stages_accept_algebra_policies():
+    from repro.dag import DagFleetConfig, DagFleetSim, JobDAG, StageSpec, dag_frontier
+
+    dag = JobDAG.pipeline(
+        [
+            StageSpec("map", 4, DIST, delayed_relaunch(2.0, r=1, keep=True)),
+            StageSpec("reduce", 6, DIST, group_replication(0.3, 1, 3)),
+        ]
+    )
+    rows = dag_frontier(
+        dag,
+        [dag.policies(), (SingleForkPolicy(0.2, 1, True),) * 2],
+        (0.1,),
+        64,
+        m_trials=8,
+        key=jax.random.PRNGKey(8),
+    )
+    assert len(rows) == 2
+    for r in rows:
+        assert np.isfinite(r["mean_sojourn"]) and r["mean_cost"] > 0
+    # the discrete-event DAG engine executes the same stage policies
+    rep = DagFleetSim(DagFleetConfig(dag=dag, seed=0)).run(np.arange(8) * 2.0)
+    assert len(rep.jobs) == 8
+    assert all(rec.finish > rec.arrival for rec in rep.jobs)
+    with pytest.raises(TypeError, match="OnClass"):
+        StageSpec("map", 4, DIST, on_class(SingleForkPolicy(0.2, 1, True), "gpu"))
+
+
+# ----------------------------------------------------------- validation
+
+
+def test_fork_policy_validation_and_labels():
+    with pytest.raises(ValueError, match="decreasing"):
+        ForkPolicy(when=(AtQuantile(0.1), AtQuantile(0.2)), how_many=1, keep=True)
+    with pytest.raises(ValueError, match="increasing"):
+        ForkPolicy(when=(AtTime(2.0), AtTime(1.0)), how_many=1, keep=True)
+    with pytest.raises(ValueError, match="match"):
+        ForkPolicy(when=(AtQuantile(0.2),), how_many=(1, 2), keep=True)
+    with pytest.raises(ValueError, match="r must be"):
+        ForkPolicy(when=AtQuantile(0.2), how_many=-1, keep=True)
+    with pytest.raises(ValueError, match="single-stage"):
+        ForkPolicy(
+            when=(AtQuantile(0.3), AtQuantile(0.2)),
+            how_many=1,
+            where=GroupSelect(2),
+            keep=True,
+        )
+    with pytest.raises(ValueError):
+        AtQuantile(0.0)
+    with pytest.raises(ValueError):
+        AtQuantile(1.0)
+    with pytest.raises(ValueError):
+        AtTime(-1.0)
+    with pytest.raises(ValueError):
+        GroupSelect(0)
+    with pytest.raises(TypeError, match="unsupported"):
+        as_fork_policy(42)
+    assert delayed_relaunch(3.0).label() == "pi(t=3,r=0,kill)"
+    assert group_replication(0.25, 1, 4).label() == "pi(p=0.25,r=1,keep)@d4"
+    assert ForkPolicy(when=()).label() == "baseline"
+    assert (
+        ForkPolicy(when=(AtQuantile(0.4), AtTime(5.0)), how_many=(1, 2),
+                   keep=(True, False)).label()
+        == "pi(p=0.4,r=1,keep | t=5,r=2,kill)"
+    )
+
+
+def test_as_fork_policy_canonicalization_and_max_replicas():
+    fp = as_fork_policy(SingleForkPolicy(0.2, 1, False))
+    assert fp.stages == ((AtQuantile(0.2), 1, False),)
+    assert as_fork_policy(SingleForkPolicy(0.0, 0, True)).is_baseline
+    mf = as_fork_policy(MultiForkPolicy(((0.4, 1, True), (0.1, 2, False))))
+    assert mf.stages == (
+        (AtQuantile(0.4), 1, True),
+        (AtQuantile(0.1), 2, False),
+    )
+    assert max_replicas(SingleForkPolicy(0.0, 0, True)) == 0
+    assert max_replicas(MultiForkPolicy(((0.4, 1, True), (0.1, 2, False)))) == 2
+    assert max_replicas(delayed_relaunch(1.0, r=3)) == 3

@@ -4,7 +4,6 @@ simulator generates, for both keep and kill, across distribution families.
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

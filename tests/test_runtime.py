@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.core import Pareto, ShiftedExp, SingleForkPolicy, Uniform, simulate
-from repro.core.distributions import Empirical
 from repro.runtime import (
     HedgedServer,
     SimCluster,
