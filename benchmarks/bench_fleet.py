@@ -15,6 +15,14 @@ Measurements:
     (power-of-two candidate buckets + pinned r_cap, so grid flexing never
     recompiles) vs the PR-3-style unpadded search across a schedule of
     changing candidate-set sizes — gated on the padded path being faster;
+  * the chaos lane: a disabled FaultSpec must reproduce the plain fused
+    frontier BITWISE (the q=0 contract); the failure-aware (π × λ × q)
+    frontier — geometric-retry transform on shared CRN draws — raced
+    against event-engine sweeps of the same spec (gated ≥5×, ≤5σ per
+    cell, obs overhead ≤1.05×); plus the (r × q) availability-vs-cost
+    table (delivered-job share under a tight retry budget) that
+    EXPERIMENTS.md renders — gated on replication buying availability
+    back at every faulty q;
   * event-driven sweep (exact engine) and vectorized sweep (JAX fast path)
     over the SAME (λ, policy) grid with capacity = n (the regime where the
     two models coincide) — reports wall-clock for both and the speedup;
@@ -61,6 +69,7 @@ from repro.core import (
 from repro.obs import trace as obs_trace
 from repro.fleet import (
     REGIME_SHIFT,
+    FaultSpec,
     FleetConfig,
     FleetPolicyController,
     FleetSim,
@@ -109,6 +118,23 @@ ADAPT = REGIME_SHIFT
 FRONTIER_POLICIES = POLICIES + (SingleForkPolicy(0.3, 2, False),)
 FRONTIER_LAMS = (0.05, 0.08, 0.12, 0.16, 0.2, 0.24)
 FRONTIER_SPEEDUP_FLOOR = 5.0
+
+# chaos lane: the failure-aware frontier adds a q axis — every task attempt
+# fails independently with probability q and relaunches immediately (the
+# geometric-retry transform on shared CRN draws), so the grid is
+# (π × λ × q) in one dispatch.  The event oracle runs the same spec on the
+# aligned engine.  Separately, an (r × q) event table records the service
+# availability (delivered-job share) each replication level buys back under
+# a tight retry budget — the EXPERIMENTS.md availability-vs-cost table.
+CHAOS_QS = (0.0, 0.1, 0.25)
+CHAOS_LAMS = (0.05, 0.12)
+CHAOS_BLOCKS = 2
+CHAOS_ATTEMPTS = 8
+CHAOS_SPEEDUP_FLOOR = 5.0
+AVAIL_RS = (0, 1, 2)
+AVAIL_QS = (0.0, 0.15, 0.3)
+AVAIL_ATTEMPTS = 2  # tight budget, so q bites and replication matters
+AVAIL_LAM = 0.12
 
 # cross-family lane: every algebra family in ONE grid — classic single
 # fork, wall-clock delayed relaunch, (n, d) group selection, a multi-fork
@@ -181,6 +207,41 @@ def _event_sweep(
                     p999=s.p999_sojourn,
                 )
             )
+    return rows
+
+
+def _event_chaos_sweep(policies, lams, qs, c_blocks, seed0: int = 0) -> list[dict]:
+    """Event-engine oracle over the failure-aware (π × λ × q) grid: aligned
+    placement with c gang blocks (the KW regime the fused fault path
+    models), q-law task failures with the same retry budget."""
+    rows = []
+    for policy in policies:
+        for lam in lams:
+            for q in qs:
+                jobs = poisson_workload(
+                    N_JOBS, rate=lam, n_tasks=N_TASKS, dist=DIST,
+                    seed=seed0 + int(lam * 1e3),
+                )
+                rep = FleetSim(
+                    FleetConfig(
+                        capacity=c_blocks * N_TASKS,
+                        policy=policy,
+                        seed=seed0,
+                        placement="aligned",
+                        fault=FaultSpec(q=q, max_attempts=CHAOS_ATTEMPTS)
+                        if q > 0 else None,
+                    )
+                ).run(jobs)
+                s = rep.stats
+                rows.append(
+                    dict(
+                        lam=lam, q=q, policy=policy.label(),
+                        mean_sojourn=s.mean_sojourn, mean_cost=s.mean_cost,
+                        p99=s.p99_sojourn, sojourn_std_err=s.sojourn_std_err,
+                        n_retries=rep.n_retries,
+                        failed_job_share=s.failed_job_share,
+                    )
+                )
     return rows
 
 
@@ -421,6 +482,182 @@ def run():
         ("fleet_cross_family_frontier", cross_s * 1e6 / len(cross_rows),
          f"families=single+relaunch+group+multi;cells={n_cross_cells};"
          f"dispatches={len(dispatches)}")
+    )
+
+    # -- chaos lane: failure-aware fused frontier --------------------------
+    # gate 1: the q=0 contract is BITWISE — a disabled FaultSpec routes
+    # onto the exact historical device program, so every row matches the
+    # plain fused frontier float for float
+    q0_rows = vector.frontier(
+        DIST, FRONTIER_POLICIES, FRONTIER_LAMS, N_TASKS, N_JOBS,
+        m_trials=M_TRIALS, key=fkey, fault=FaultSpec(q=0.0),
+    )
+    q0_mismatch = sum(
+        1
+        for a, f in zip(q0_rows, fused_rows)
+        for field in bitwise_fields
+        if a[field] != f[field]
+    )
+    if not record_gate(
+        "chaos_q0_bitwise", q0_mismatch == 0,
+        f"mismatched_fields={q0_mismatch} over {len(fused_rows)} cells "
+        f"x {len(bitwise_fields)} keys",
+    ):
+        failures.append(
+            f"FaultSpec(q=0) frontier drifted from the plain fused frontier "
+            f"({q0_mismatch} field mismatches) — the q=0 contract is bitwise"
+        )
+    # gate 2: the (π × λ × q) failure-aware frontier vs event-engine sweeps
+    # over the SAME grid/spec (aligned placement = the KW regime)
+    chaos_pols = (POLICIES[0], POLICIES[1])
+    chaos_specs = tuple(FaultSpec(q=q, max_attempts=CHAOS_ATTEMPTS) for q in CHAOS_QS)
+    ckey = jax.random.PRNGKey(29)
+    vector.frontier(
+        DIST, chaos_pols, CHAOS_LAMS, N_TASKS, N_JOBS, m_trials=M_TRIALS,
+        key=ckey, c=CHAOS_BLOCKS, fault=chaos_specs,
+    )  # warm the faulty-frontier compilation
+    chaos_speedup = 0.0
+    for attempt in range(3):
+        t0 = time.perf_counter()
+        chaos_event_rows = _event_chaos_sweep(chaos_pols, CHAOS_LAMS, CHAOS_QS,
+                                              CHAOS_BLOCKS)
+        attempt_event_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        chaos_rows = vector.frontier(
+            DIST, chaos_pols, CHAOS_LAMS, N_TASKS, N_JOBS, m_trials=M_TRIALS,
+            key=ckey, c=CHAOS_BLOCKS, fault=chaos_specs,
+        )
+        attempt_vec_s = time.perf_counter() - t0
+        if attempt_event_s / max(attempt_vec_s, 1e-9) > chaos_speedup:
+            chaos_speedup = attempt_event_s / max(attempt_vec_s, 1e-9)
+            chaos_event_s, chaos_vec_s = attempt_event_s, attempt_vec_s
+        if chaos_speedup >= CHAOS_SPEEDUP_FLOOR:
+            break
+    if not record_gate(
+        "chaos_frontier_speedup", chaos_speedup >= CHAOS_SPEEDUP_FLOOR,
+        f"{chaos_speedup:.1f}x (floor {CHAOS_SPEEDUP_FLOOR}x; "
+        f"event={chaos_event_s:.2f}s vec={chaos_vec_s:.2f}s, "
+        f"{len(chaos_rows)} cells)",
+    ):
+        failures.append(
+            f"failure-aware fused frontier only {chaos_speedup:.1f}x faster "
+            f"than the event engine (floor {CHAOS_SPEEDUP_FLOOR}x; "
+            f"event={chaos_event_s:.2f}s vec={chaos_vec_s:.2f}s)"
+        )
+    # agreement: fused cells vs the oracle, worst deviation in combined-MC
+    # sigma units (batch-means std err on the event side)
+    chaos_dev = max(
+        abs(f["mean_sojourn"] - e["mean_sojourn"])
+        / max(float(np.hypot(f["sojourn_std_err"], e["sojourn_std_err"])), 1e-12)
+        for f, e in zip(chaos_rows, chaos_event_rows)
+    )
+    if not record_gate(
+        "chaos_event_agreement", chaos_dev <= 5.0,
+        f"max_cell_dev={chaos_dev:.2f}sigma over {len(chaos_rows)} "
+        f"(pi x lam x q) cells",
+    ):
+        failures.append(
+            f"failure-aware fused cells disagree with the event oracle: "
+            f"worst cell off by {chaos_dev:.1f} sigma"
+        )
+    rows.append(
+        ("fleet_chaos_event", chaos_event_s * 1e6 / len(chaos_event_rows),
+         f"cells={len(chaos_event_rows)};q={','.join(map(str, CHAOS_QS))}")
+    )
+    rows.append(
+        ("fleet_chaos_fused", chaos_vec_s * 1e6 / len(chaos_rows),
+         f"speedup={chaos_speedup:.1f}x;max_dev={chaos_dev:.2f}sigma;"
+         f"q0_mismatches={q0_mismatch}")
+    )
+    # gate 3: obs overhead on the failure-aware grid — the chaos counters
+    # and fault axis must not break the ≤1.05x instrumentation contract
+    chaos_obs_ratio = float("inf")
+    for attempt in range(3):
+        t0 = time.perf_counter()
+        for _ in range(OBS_REPS):
+            vector.frontier(
+                DIST, chaos_pols, CHAOS_LAMS, N_TASKS, N_JOBS,
+                m_trials=M_TRIALS, key=ckey, c=CHAOS_BLOCKS, fault=chaos_specs,
+            )
+        attempt_off_s = time.perf_counter() - t0
+        obs_trace.enable()
+        try:
+            t0 = time.perf_counter()
+            for _ in range(OBS_REPS):
+                vector.frontier(
+                    DIST, chaos_pols, CHAOS_LAMS, N_TASKS, N_JOBS,
+                    m_trials=M_TRIALS, key=ckey, c=CHAOS_BLOCKS,
+                    fault=chaos_specs,
+                )
+            attempt_on_s = time.perf_counter() - t0
+        finally:
+            obs_trace.disable()
+        if attempt_on_s / max(attempt_off_s, 1e-9) < chaos_obs_ratio:
+            chaos_obs_ratio = attempt_on_s / max(attempt_off_s, 1e-9)
+            chaos_obs_off_s, chaos_obs_on_s = attempt_off_s, attempt_on_s
+        if chaos_obs_ratio <= 1.05:
+            break
+    if not record_gate(
+        "chaos_obs_overhead", chaos_obs_ratio <= 1.05,
+        f"enabled/disabled={chaos_obs_ratio:.3f} (ceiling 1.05; "
+        f"on={chaos_obs_on_s:.2f}s off={chaos_obs_off_s:.2f}s x{OBS_REPS})",
+    ):
+        failures.append(
+            f"instrumented failure-aware frontier costs {chaos_obs_ratio:.2f}x "
+            f"the disabled path (ceiling 1.05x)"
+        )
+    rows.append(
+        ("fleet_chaos_obs_overhead",
+         chaos_obs_on_s * 1e6 / (OBS_REPS * len(chaos_rows)),
+         f"enabled/disabled={chaos_obs_ratio:.3f}")
+    )
+    # availability-vs-cost: how much delivered-job share each replication
+    # level buys back as q grows, under a tight retry budget (event engine,
+    # near-full replication so every task holds r+1 lifelines)
+    avail_rows = []
+    for r in AVAIL_RS:
+        pol = SingleForkPolicy(0.95, r, False)
+        for q in AVAIL_QS:
+            jobs = poisson_workload(
+                N_JOBS // 2, rate=AVAIL_LAM, n_tasks=N_TASKS, dist=DIST, seed=17
+            )
+            rep = FleetSim(
+                FleetConfig(
+                    capacity=4 * N_TASKS, policy=pol, seed=17,
+                    fault=FaultSpec(q=q, max_attempts=AVAIL_ATTEMPTS)
+                    if q > 0 else None,
+                )
+            ).run(jobs)
+            avail_rows.append(
+                dict(
+                    r=r, q=q,
+                    availability=1.0 - rep.stats.failed_job_share,
+                    mean_cost=rep.stats.mean_cost,
+                    mean_attempts=rep.stats.mean_attempts,
+                    n_retries=rep.n_retries, n_failed=rep.n_failed,
+                )
+            )
+    # replication must buy availability back at every faulty q level
+    avail_by = {(row["r"], row["q"]): row["availability"] for row in avail_rows}
+    avail_monotone = all(
+        avail_by[(1, q)] >= avail_by[(0, q)] for q in AVAIL_QS if q > 0
+    )
+    if not record_gate(
+        "chaos_availability_replication",
+        avail_monotone,
+        "; ".join(
+            f"q={q}: " + "/".join(f"r{r}={avail_by[(r, q)]:.3f}" for r in AVAIL_RS)
+            for q in AVAIL_QS if q > 0
+        ),
+    ):
+        failures.append(
+            "replication did not improve delivered-job availability under "
+            "task failures"
+        )
+    rows.append(
+        ("fleet_chaos_availability", 0.0,
+         ";".join(f"r{row['r']}q{row['q']}={row['availability']:.3f}"
+                  for row in avail_rows if row["q"] > 0))
     )
 
     # -- adaptive re-plan latency: padded fused search vs PR-3 unpadded ----
@@ -764,6 +1001,33 @@ def run():
                     vector_mean_sojourn=res3.mean_sojourn,
                     deviation_sigma=dev3,
                     cost_deviation=cost_dev3,
+                ),
+            ),
+            chaos=dict(
+                qs=list(CHAOS_QS),
+                lams=list(CHAOS_LAMS),
+                policies=[p.label() for p in chaos_pols],
+                c_blocks=CHAOS_BLOCKS,
+                max_attempts=CHAOS_ATTEMPTS,
+                q0_bitwise_mismatches=q0_mismatch,
+                timing=dict(event_s=chaos_event_s, vector_s=chaos_vec_s,
+                            speedup=chaos_speedup),
+                max_cell_deviation_sigma=chaos_dev,
+                obs_overhead=dict(enabled_s=chaos_obs_on_s,
+                                  disabled_s=chaos_obs_off_s,
+                                  ratio=chaos_obs_ratio, reps=OBS_REPS),
+                event=chaos_event_rows,
+                fused=chaos_rows,
+                # the EXPERIMENTS.md availability-vs-cost table: delivered-job
+                # share and Definition-2 cost per (replication r × failure q)
+                # under a tight per-copy retry budget
+                availability_cost=dict(
+                    rs=list(AVAIL_RS),
+                    qs=list(AVAIL_QS),
+                    max_attempts=AVAIL_ATTEMPTS,
+                    lam=AVAIL_LAM,
+                    n_jobs=N_JOBS // 2,
+                    rows=avail_rows,
                 ),
             ),
             adaptive=dict(

@@ -64,6 +64,40 @@ def cross_family_table() -> str:
     return "\n".join(out)
 
 
+def availability_cost_table() -> str:
+    p = ROOT / "benchmarks" / "results" / "fleet_frontier.json"
+    if not p.exists():
+        return "_run `python -m benchmarks.run --only fleet` to generate._"
+    art = json.loads(p.read_text())
+    chaos = art.get("chaos")
+    if not chaos:
+        return "_run `python -m benchmarks.run --only fleet` to generate._"
+    ac = chaos["availability_cost"]
+    by = {(row["r"], row["q"]): row for row in ac["rows"]}
+    out = [
+        f"λ = {ac['lam']}, {ac['n_jobs']} jobs × 16 tasks, near-full "
+        f"replication π(0.95, r, kill), max_attempts = {ac['max_attempts']}; "
+        "cells are availability / E[C].",
+        "",
+        "| r \\ q | " + " | ".join(f"q={q}" for q in ac["qs"]) + " |",
+        "|---|" + "---|" * len(ac["qs"]),
+    ]
+    for r in ac["rs"]:
+        cells = [
+            f"{by[(r, q)]['availability']:.3f} / {by[(r, q)]['mean_cost']:.2f}"
+            for q in ac["qs"]
+        ]
+        out.append(f"| r={r} | " + " | ".join(cells) + " |")
+    t = chaos["timing"]
+    out.append(
+        f"\n(lane gates: q0_bitwise_mismatches="
+        f"{chaos['q0_bitwise_mismatches']}, fused {t['speedup']:.1f}× vs "
+        f"event, max cell dev {chaos['max_cell_deviation_sigma']:.2f}σ, "
+        f"obs ratio {chaos['obs_overhead']['ratio']:.3f})"
+    )
+    return "\n".join(out)
+
+
 def inject(text: str, marker: str, content: str) -> str:
     block = f"<!-- {marker} -->"
     assert block in text, marker
@@ -80,6 +114,7 @@ def main():
     single = [r for r in rows if r["mesh"] == "single"]
     multi = [r for r in rows if r["mesh"] == "multi"]
     text = inject(text, "CROSS_FAMILY_PARETO", cross_family_table())
+    text = inject(text, "CHAOS_AVAILABILITY", availability_cost_table())
     text = inject(text, "DRYRUN_TABLE", dryrun_summary())
     text = inject(text, "ROOFLINE_TABLE_SINGLE", roofline.markdown_table(single))
     text = inject(

@@ -54,12 +54,15 @@ import numpy as np
 from repro.core.policy import SingleForkPolicy, lower_policies, max_replicas
 from repro.core.simulate import lowered_policy_eval, policy_draws
 from repro.fleet.vector import (
+    _fault_qs,
     as_quantile_source,
     batched_queue,
     cell_bucket,
     emp_quantile,
     fork_draws,
     masked_single_fork,
+    retry_draws,
+    retry_transform,
 )
 
 from .graph import JobDAG
@@ -88,7 +91,8 @@ def _plan(dag: JobDAG):
 
 
 def _compose(key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs, m_trials,
-             r_caps, kernel, modess=None, tss=None, dss=None, n_stagess=None):
+             r_caps, kernel, modess=None, tss=None, dss=None, n_stagess=None,
+             qs=None, attempts=None):
     """The stage-composed core: full (cells, m, J) tensors per stage.
 
     One CRN draw pair per stage shared by every cell; stages advance in the
@@ -104,6 +108,13 @@ def _compose(key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs, m_trials,
     (modess/kss/tss/rss/keepss as (cells, S_s) rows, dss as (cells,) group
     widths, n_stagess static inner stage counts) through the general
     `lowered_policy_eval` on the same CRN layout.
+
+    `qs` (a (cells,) traced vector, with the static draw width `attempts`)
+    switches every stage's sampling to the geometric-retry transform: raw
+    draws widen by an attempts axis and each cell folds them with ITS q
+    before the policy evaluator (fleet.vector.retry_transform semantics).
+    qs=None traces the historical programs verbatim — the bit-identity
+    anchor, selected host-side exactly as in the fleet frontier.
     """
     S = len(plan)
     ka, kf = jax.random.split(key)
@@ -120,14 +131,26 @@ def _compose(key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs, m_trials,
     for s in range(S):
         n_s, c_s, preds, dist_s = plan[s]
         quantile = dist_s.quantile if dist_s is not None else partial(emp_quantile, xss[s])
-        if modess is None:
+        if modess is None and qs is None:
             x_sorted, fresh = fork_draws(
                 stage_keys[s], quantile, (m_trials, n_jobs), n_s, r_caps[s]
             )
             T_s, C_s = jax.vmap(
                 lambda k, r, kp: masked_single_fork(x_sorted, fresh, k, r, kp)
             )(kss[:, s], rss[:, s], keepss[:, s])  # each (cells, m, J)
-        else:
+        elif modess is None:
+            kx, ky = jax.random.split(stage_keys[s])
+            xr, xv = retry_draws(kx, quantile, (m_trials, n_jobs, n_s), attempts)
+            fr, fv = retry_draws(
+                ky, quantile, (m_trials, n_jobs, n_s, r_caps[s]), attempts
+            )
+            T_s, C_s = jax.vmap(
+                lambda k, r, kp, q: masked_single_fork(
+                    jnp.sort(retry_transform(xr, xv, q), axis=-1),
+                    retry_transform(fr, fv, q), k, r, kp,
+                )
+            )(kss[:, s], rss[:, s], keepss[:, s], qs)
+        elif qs is None:
             x, fresh = policy_draws(
                 stage_keys[s], quantile, (m_trials, n_jobs), n_s, r_caps[s],
                 n_stagess[s],
@@ -137,6 +160,19 @@ def _compose(key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs, m_trials,
                     x, fresh, mode, k, t, r, kp, d
                 )
             )(modess[s], kss[s], tss[s], rss[s], keepss[s], dss[s])
+        else:
+            kx, ky = jax.random.split(stage_keys[s])
+            xr, xv = retry_draws(kx, quantile, (m_trials, n_jobs, n_s), attempts)
+            fr, fv = retry_draws(
+                ky, quantile,
+                (m_trials, n_jobs, n_stagess[s], n_s, r_caps[s]), attempts,
+            )
+            T_s, C_s = jax.vmap(
+                lambda mode, k, t, r, kp, d, q: lowered_policy_eval(
+                    retry_transform(xr, xv, q), retry_transform(fr, fv, q),
+                    mode, k, t, r, kp, d,
+                )
+            )(modess[s], kss[s], tss[s], rss[s], keepss[s], dss[s], qs)
         if preds:
             ready = finishes[preds[0]]
             for p in preds[1:]:
@@ -203,11 +239,11 @@ def _critical_attribution(arrivals, readys, finishes, plan, sinks):
 @partial(
     jax.jit,
     static_argnames=("plan", "sinks", "n_jobs", "m_trials", "r_caps", "kernel",
-                     "hist", "n_stagess"),
+                     "hist", "n_stagess", "attempts"),
 )
 def _dag_stats_jit(key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs,
                    m_trials, r_caps, kernel, hist=None, modess=None, tss=None,
-                   dss=None, n_stagess=None):
+                   dss=None, n_stagess=None, qs=None, attempts=None):
     """Grid evaluation: one stacked stats row per cell + job sojourns for
     host-side percentiles (XLA CPU sort is ~10x slower than np.partition,
     same split as the fleet frontier).  With `hist` (a static
@@ -217,6 +253,7 @@ def _dag_stats_jit(key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs,
     arrivals, readys, starts, finishes, Ts, Cs = _compose(
         key, xss, kss, rss, keepss, lams, plan, sinks, n_jobs, m_trials,
         r_caps, kernel, modess=modess, tss=tss, dss=dss, n_stagess=n_stagess,
+        qs=qs, attempts=attempts,
     )
     sojourn, attrs = _critical_attribution(arrivals, readys, finishes, plan, sinks)
     S = len(plan)
@@ -360,12 +397,17 @@ def _eval_dag_cells(
     r_caps,
     pad_cells: bool,
     tail="exact",
+    cell_qs=None,
+    attempts=None,
 ):
     """Shared engine behind `dag_frontier` (and the joint searches): one
     stats dict per (policy-vector, λ) cell from a single fused dispatch.
     `tail` follows the fleet `_eval_cells` convention: "exact" ships the
     sojourn matrices, "hist" / a `repro.obs.HistSpec` ships in-program
-    bincounts and adds cost_p50/cost_p99/cost_p999 to every row."""
+    bincounts and adds cost_p50/cost_p99/cost_p999 to every row.
+    `cell_qs` (one per cell, static draw width `attempts`) runs every stage
+    under the geometric-retry transform; None keeps the historical
+    bit-identical programs."""
     if not cell_vectors:
         raise ValueError("need at least one candidate policy vector")
     cell_vectors = [dag.validate_policy_vector(v) for v in cell_vectors]
@@ -381,6 +423,15 @@ def _eval_dag_cells(
     vecs = list(cell_vectors) + [cell_vectors[0]] * (n_padded - n_cells)
     lams = [float(lam) for lam in cell_lams]
     lams += [lams[0]] * (n_padded - n_cells)
+    qs_arg = None
+    if cell_qs is not None:
+        if len(cell_qs) != n_cells:
+            raise ValueError("need one q per cell")
+        if attempts is None or attempts < 1:
+            raise ValueError("cell_qs needs a static attempts >= 1")
+        qs = [float(q) for q in cell_qs]
+        qs += [qs[0]] * (n_padded - n_cells)
+        qs_arg = jnp.asarray(qs)
     # canonical per-stage lowering: all-single-fork grids reduce to the
     # historical (cells, S) k/r/keep arrays (k = n - num_stragglers via the
     # one rounding contract), algebra grids carry the general param tensors
@@ -400,7 +451,7 @@ def _eval_dag_cells(
     stats, payload = _dag_stats_jit(
         key, xss, ks, rs, keeps,
         jnp.asarray(lams), plan, sinks, n_jobs, m_trials, r_caps, kernel,
-        hist=hist, **gen_kwargs,
+        hist=hist, qs=qs_arg, attempts=attempts, **gen_kwargs,
     )
     stats = np.asarray(stats)[:n_cells]
     if hist is None:
@@ -426,6 +477,8 @@ def _eval_dag_cells(
             label=vector_label(vec, dag),
             **dict(zip(_DAG_JIT_KEYS, map(float, stats[i, :nk]))),
         )
+        if cell_qs is not None:
+            row["q"] = float(cell_qs[i])
         row["p50"], row["p99"], row["p999"] = (float(pcts[j, i]) for j in range(3))
         if cost_pcts is not None:
             row["cost_p50"], row["cost_p99"], row["cost_p999"] = (
@@ -450,6 +503,7 @@ def dag_frontier(
     r_caps=None,
     pad_cells: bool = True,
     tail="exact",
+    fault=None,
 ) -> list[dict]:
     """The whole (per-stage-policy-vector × λ) cross-product as ONE fused
     device program over shared CRN draws.
@@ -468,6 +522,12 @@ def dag_frontier(
     `r_caps` pins per-stage fresh-draw widths for re-plan stability.
     `kernel=True` routes every stage's queue through the Pallas
     `kernels.kw_queue` kernel (one call per stage).
+
+    `fault` (a `repro.faults.FaultSpec` or sequence — q law, immediate
+    relaunch only) adds a failure axis exactly as in the fleet `frontier`:
+    cells = vectors × λs × faults with q fastest, every stage samples
+    through the geometric-retry transform, rows gain "q", and a single
+    disabled spec reproduces the fault-free rows bitwise.
     """
     policy_vectors = [tuple(v) for v in policy_vectors]
     lams = [float(lam) for lam in lams]
@@ -475,9 +535,23 @@ def dag_frontier(
         raise ValueError("need at least one arrival rate")
     cell_vectors = [vec for vec in policy_vectors for _ in lams]
     cell_lams = lams * len(policy_vectors)
+    cell_qs = attempts = None
+    if fault is not None:
+        qs, attempts = _fault_qs(fault)
+        if len(qs) == 1 and qs[0] == 0.0:
+            rows = _eval_dag_cells(
+                dag, cell_vectors, cell_lams, n_jobs, m_trials, key, kernel,
+                r_caps, pad_cells, tail=tail,
+            )
+            for row in rows:
+                row["q"] = 0.0
+            return rows
+        cell_vectors = [vec for vec in cell_vectors for _ in qs]
+        cell_lams = [lam for lam in cell_lams for _ in qs]
+        cell_qs = qs * (len(policy_vectors) * len(lams))
     return _eval_dag_cells(
         dag, cell_vectors, cell_lams, n_jobs, m_trials, key, kernel, r_caps,
-        pad_cells, tail=tail,
+        pad_cells, tail=tail, cell_qs=cell_qs, attempts=attempts,
     )
 
 

@@ -1,0 +1,22 @@
+"""repro.faults — declarative chaos: crash processes, task-failure laws,
+retry/backoff budgets.  Executed exactly by `repro.fleet.FleetScheduler`
+and folded into the fused planners via the geometric-retry transform
+(`repro.fleet.vector.retry_transform`)."""
+
+from .model import (
+    ChaosSchedule,
+    CrashProcess,
+    FaultSpec,
+    Outage,
+    effective_fail_prob,
+    schedule_for_kill_fraction,
+)
+
+__all__ = [
+    "ChaosSchedule",
+    "CrashProcess",
+    "FaultSpec",
+    "Outage",
+    "effective_fail_prob",
+    "schedule_for_kill_fraction",
+]

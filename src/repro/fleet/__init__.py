@@ -26,8 +26,23 @@ from .adaptive import (  # noqa: F401
     as_policy_provider,
     ks_statistic,
 )
-from .scenarios import REGIME_SHIFT, RegimeShiftScenario  # noqa: F401
+from .scenarios import (  # noqa: F401
+    CHAOS,
+    ChaosScenario,
+    REGIME_SHIFT,
+    RegimeShiftScenario,
+)
 from .scheduler import FleetScheduler, JobRecord  # noqa: F401
+# the chaos-engine declarative surface (repro.faults), re-exported because
+# a FaultSpec is configured in the same breath as the FleetConfig using it
+from repro.faults import (  # noqa: F401
+    ChaosSchedule,
+    CrashProcess,
+    FaultSpec,
+    Outage,
+    effective_fail_prob,
+    schedule_for_kill_fraction,
+)
 from .metrics import (  # noqa: F401
     DagStats,
     FleetStats,
@@ -49,9 +64,14 @@ from .vector import (  # noqa: F401
 )
 
 __all__ = [
+    "CHAOS",
+    "ChaosSchedule",
+    "ChaosScenario",
+    "CrashProcess",
     "DagStats",
     "Event",
     "EventHeap",
+    "FaultSpec",
     "FleetConfig",
     "FleetPolicyController",
     "FleetReport",
@@ -61,12 +81,15 @@ __all__ = [
     "Job",
     "JobRecord",
     "MachineClass",
+    "Outage",
     "OwnedHeap",
     "PolicyDecision",
     "REGIME_SHIFT",
     "RegimeShiftScenario",
     "as_policy_provider",
     "bursty_workload",
+    "effective_fail_prob",
+    "schedule_for_kill_fraction",
     "compute_dag_stats",
     "compute_stats",
     "dag_critical_path_shares",

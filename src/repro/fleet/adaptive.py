@@ -87,7 +87,7 @@ class PolicyDecision:
     """One re-optimization outcome (the controller's audit trail)."""
 
     policy: SingleForkPolicy
-    trigger: str  # "periodic" | "drift"
+    trigger: str  # "periodic" | "drift" | "failure_drift"
     lam_hat: float
     rho: float  # estimated offered load of the chosen policy
     mean_sojourn: float  # its predicted fleet sojourn at lam_hat
@@ -126,6 +126,13 @@ class FleetPolicyController:
     explore_p: float = 0.05  # fork fraction when exploring from baseline
     drift_threshold: float = 1.63  # KS c(α)·√((m+n)/mn); 1.63 ≈ α = 0.01
     drift_cooldown: int = 16  # min jobs between drift-triggered re-opts
+    # failure-rate drift (chaos telemetry): attempt outcomes stream into a
+    # bounded window (0 = success, 1 = failure via record_task_failure); a
+    # half-split |q̂_new - q̂_old| over a full window beyond the threshold
+    # re-plans immediately, and every re-plan scores candidates under the
+    # estimated q̂ (policy_search's geometric-retry transform)
+    fail_window: int = 512
+    fail_drift_threshold: float = 0.15
     arrival_window: int = 48  # arrivals kept for the λ̂ estimate
     rho_max: float = 0.95  # stability guard: veto ρ̂ >= rho_max
     search_jobs: int = 192  # rollout horizon per candidate
@@ -160,6 +167,9 @@ class FleetPolicyController:
         self.decisions = DecisionLog()
         self._now = 0.0  # latest sim time seen (arrivals / completions)
         self.last_ks_stat = float("nan")  # most recent drift-test statistic
+        self._outcomes: deque = deque(maxlen=self.fail_window)
+        self.last_fail_drift = float("nan")
+        self.n_fail_drifts = 0
 
     # -------------------------------------------------- provider interface
     def bind_fleet(self, classes: Sequence[MachineClass]) -> None:
@@ -181,12 +191,26 @@ class FleetPolicyController:
         x = float(seconds)
         self._seen += 1
         self._recent.append(x)
+        self._outcomes.append(0)
         if len(self._samples) < self.window:
             self._samples.append(x)
         else:
             j = int(self._rng.integers(0, self._seen))
             if j < self.window:
                 self._samples[j] = x
+
+    def record_task_failure(self, machine_class: Optional[str] = None) -> None:
+        """One failed task attempt (chaos telemetry from the scheduler):
+        streams into the failure-rate window so q̂ tracks the live failure
+        law and a drift in it triggers an immediate re-plan."""
+        self._outcomes.append(1)
+
+    def fail_rate_estimate(self) -> Optional[float]:
+        """Per-attempt failure probability q̂ over the outcome window (None
+        until min_samples attempts have been seen)."""
+        if len(self._outcomes) < self.min_samples:
+            return None
+        return float(np.mean(self._outcomes))
 
     def record_job_complete(
         self,
@@ -216,6 +240,24 @@ class FleetPolicyController:
                 n_samples=len(self._samples),
             ))
             self._reoptimize("drift")
+        elif self._fail_drift_detected():
+            # the failure law moved (a chaos wave started or ended): the old
+            # window half is stale evidence — keep the new half and re-plan
+            # under the fresh q̂ immediately
+            half = len(self._outcomes) // 2
+            kept = list(self._outcomes)[half:]
+            self._outcomes.clear()
+            self._outcomes.extend(kept)
+            self.n_fail_drifts += 1
+            self._last_drift_job = self._jobs
+            from repro.obs.decisions import DecisionEvent, KIND_DRIFT
+
+            self.decisions.log(DecisionEvent(
+                t=self._now, kind=KIND_DRIFT, label="failure-rate shift",
+                trigger="failure_rate", ks_stat=self.last_fail_drift,
+                n_samples=len(self._outcomes),
+            ))
+            self._reoptimize("failure_drift")
         elif (
             self._jobs % self.reoptimize_every == 0
             and len(self._samples) >= self.min_samples
@@ -271,6 +313,20 @@ class FleetPolicyController:
         d = ks_statistic(self._recent, self._samples)
         self.last_ks_stat = d  # surfaced in the structured decision log
         return d > self.drift_threshold * np.sqrt((m + n) / (m * n))
+
+    def _fail_drift_detected(self) -> bool:
+        """Half-split test on the attempt-outcome window: did the failure
+        rate move by more than fail_drift_threshold within it?"""
+        m = len(self._outcomes)
+        if m < self.fail_window:  # demand a full window of evidence
+            return False
+        if self._jobs - self._last_drift_job < self.drift_cooldown:
+            return False
+        arr = np.asarray(self._outcomes, dtype=np.float64)
+        half = m // 2
+        d = abs(float(arr[half:].mean()) - float(arr[:half].mean()))
+        self.last_fail_drift = d
+        return d > self.fail_drift_threshold
 
     def _candidates(self, n: Optional[int] = None) -> list:
         cands: list = [BASELINE]
@@ -353,6 +409,16 @@ class FleetPolicyController:
             samples = self._rng.choice(samples, size=self.window, replace=True)
         cands = self._candidates(n)
         c, classes = self._search_geometry(n)
+        # failure-aware scoring: candidates are evaluated under the live
+        # estimated per-attempt failure probability q̂ (the fused geometric-
+        # retry transform), so replication levels are chosen for the fleet
+        # the telemetry actually shows, not an idealized fault-free one
+        fault = None
+        q_hat = self.fail_rate_estimate()
+        if q_hat is not None and q_hat > 0.0:
+            from repro.faults.model import FaultSpec
+
+            fault = FaultSpec(q=min(q_hat, 0.95))
         # r_cap pins the fused program's fresh-draw width to the grid's
         # ceiling and the candidate count pads to a fixed bucket, so every
         # re-plan after the first reuses one compilation per geometry
@@ -360,7 +426,7 @@ class FleetPolicyController:
             samples, cands, lam_hat, n,
             n_jobs=self.search_jobs, m_trials=self.search_trials,
             key=self._search_key(), c=c, classes=classes,
-            kernel=self.use_kernel, r_cap=self.r_max + 1,
+            kernel=self.use_kernel, r_cap=self.r_max + 1, fault=fault,
         )
         pick = self._choose(rows, n)
         pol = pick["policy"]
@@ -404,7 +470,7 @@ class FleetPolicyController:
                     samples, cands, lam_k, n,
                     n_jobs=self.search_jobs, m_trials=self.search_trials,
                     key=self._search_key(), classes=(k,),
-                    kernel=self.use_kernel, r_cap=self.r_max + 1,
+                    kernel=self.use_kernel, r_cap=self.r_max + 1, fault=fault,
                 )
                 class_picks[k.name] = self._choose(rows_k, n)["policy"]
             self._class_policies = dict(class_picks)

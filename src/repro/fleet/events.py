@@ -70,12 +70,29 @@ class EventHeap:
         return ev
 
     def cancel(self, ev: Event) -> None:
-        """Lazy-delete: the event stays heaped but will be skipped."""
+        """Lazy-delete: the event stays heaped but will be skipped.
+
+        The payload is dropped immediately — a lazily-cancelled event can
+        sit in the heap until its original fire time, and under chaos
+        (mass crash-kills) cancelled copy_done events dominate, so keeping
+        `data` alive would pin every killed copy's job state.  When dead
+        entries outnumber live ones the heap is compacted in place.
+        """
         if not ev.cancelled:
             ev.cancel()
+            ev.data = None
             self._live -= 1
             if self.recorder is not None:
                 self.recorder.count("events.cancelled")
+            if len(self._heap) > 64 and self._live * 2 < len(self._heap):
+                self._compact()
+
+    def _compact(self) -> None:
+        """Rebuild the heap from live entries only (O(live))."""
+        self._heap = [entry for entry in self._heap if not entry[2].cancelled]
+        heapq.heapify(self._heap)
+        if self.recorder is not None:
+            self.recorder.count("events.compactions")
 
     def pop(self) -> Optional[Event]:
         """Next live event in (time, seq) order; None when drained."""

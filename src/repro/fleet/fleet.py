@@ -57,6 +57,14 @@ class FleetConfig:
     # its own fresh Recorder; a `repro.obs.Recorder` = use that one.
     # Either way the live recorder comes back as `FleetReport.trace`.
     obs: object = None
+    # chaos: a `repro.faults.FaultSpec` (crash processes / outage schedule /
+    # task-failure law + retry budget); None or a disabled spec reproduces
+    # the historical engine bitwise
+    fault: object = None
+    # graceful degradation: shed arrivals of priority >= shed_min_priority
+    # while the estimated occupancy ρ̂ exceeds shed_rho (None = never shed)
+    shed_rho: Optional[float] = None
+    shed_min_priority: int = 1
 
 
 @dataclasses.dataclass
@@ -71,6 +79,13 @@ class FleetReport:
     # the repro.obs Recorder that captured this run (NullRecorder when
     # disabled); feed to `repro.obs.write_chrome_trace` for Perfetto
     trace: Optional[object] = None
+    # chaos / degradation counters (all zero without a fault spec)
+    n_task_failures: int = 0
+    n_crash_kills: int = 0
+    n_retries: int = 0
+    n_failed: int = 0
+    n_timeouts: int = 0
+    n_shed: int = 0
 
     @property
     def final_policy(self) -> Optional[str]:
@@ -112,6 +127,9 @@ class FleetSim:
             classes=cfg.classes,
             placement=cfg.placement,
             recorder=recorder,
+            fault=cfg.fault,
+            shed_rho=cfg.shed_rho,
+            shed_min_priority=cfg.shed_min_priority,
         )
         if self.controller is not None and hasattr(self.controller, "bind_recorder"):
             self.controller.bind_recorder(recorder)
@@ -122,6 +140,8 @@ class FleetSim:
             sched.busy_time,
             classes=sched.classes if cfg.classes is not None else None,
             busy_by_class=sched.busy_by_class if cfg.classes is not None else None,
+            down_time=sched.down_time,
+            repairs_by_class=sched.repairs_by_class,
         )
         return FleetReport(
             records=records,
@@ -131,6 +151,12 @@ class FleetSim:
             busy_time=sched.busy_time,
             controller=self.controller,
             trace=recorder if recorder is not None else _trace.get_recorder(),
+            n_task_failures=sched.n_task_failures,
+            n_crash_kills=sched.n_crash_kills,
+            n_retries=sched.n_retries,
+            n_failed=sched.n_failed,
+            n_timeouts=sched.n_timeouts,
+            n_shed=sched.n_shed,
         )
 
 

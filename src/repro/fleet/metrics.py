@@ -76,6 +76,14 @@ class FleetStats:
     # class name (None on single-class fleets built without class specs)
     class_utilization: Optional[dict] = None
     class_job_share: Optional[dict] = None
+    # chaos (repro.faults): fraction of slot-time the fleet was up, the
+    # share of jobs that ended terminally failed (shed / timeout /
+    # max_attempts), mean copy launches per task (1.0 = no retries), and
+    # the observed mean repair time per class (None when nothing crashed)
+    availability: float = 1.0
+    failed_job_share: float = 0.0
+    mean_attempts: float = 1.0
+    class_mttr: Optional[dict] = None
 
     def row(self) -> str:
         return (
@@ -109,12 +117,21 @@ def compute_stats(
     busy_time: float,
     classes: Optional[Sequence[MachineClass]] = None,
     busy_by_class: Optional[Sequence[float]] = None,
+    down_time: float = 0.0,
+    repairs_by_class: Optional[Sequence[Sequence[float]]] = None,
 ) -> FleetStats:
     if not records:
         raise ValueError("no job records")
-    soj = np.array([r.sojourn for r in records])
-    wait = np.array([r.wait for r in records])
-    svc = np.array([r.service for r in records])
+    # latency percentiles/means describe jobs that actually completed —
+    # a shed job's zero-length "sojourn" is a refusal, not a latency.
+    # Cost, replicas, and attempts aggregate over EVERY record: retried
+    # attempts' copy-seconds (and failed jobs' burned work) are real bills
+    # the fleet paid, so they belong in E[C] (Definition 2 under faults).
+    done = [r for r in records if not r.failed]
+    latency_records = done if done else list(records)
+    soj = np.array([r.sojourn for r in latency_records])
+    wait = np.array([r.wait for r in latency_records])
+    svc = np.array([r.service for r in latency_records])
     cost = np.array([r.cost for r in records])
     t0 = min(r.arrival for r in records)
     makespan = max(r.finish for r in records) - t0
@@ -124,15 +141,37 @@ def compute_stats(
             k.name: float(b / (k.slots * max(makespan, 1e-12)))
             for k, b in zip(classes, busy_by_class)
         }
-        # every job is attributed exactly once: to its class, or — pooled
-        # placement where a job's copies spanned classes — to "mixed".
-        # Shares therefore always sum to 1 (tests/test_fleet.py asserts it).
+        # every job is attributed exactly once: to its class, to "mixed"
+        # (pooled placement spanning classes — including a crash retry
+        # re-queued onto another class), or to "unplaced" (shed / timed out
+        # in queue).  The pop-then-append walk keys on whatever names the
+        # records carry, so shares always sum to 1 even under chaos
+        # (tests/test_fleet.py and tests/test_faults.py assert it).
         counts: dict = {}
         for r in records:
             counts[r.machine_class] = counts.get(r.machine_class, 0) + 1
         class_share = {k.name: counts.pop(k.name, 0) / len(records) for k in classes}
         for name, cnt in sorted(counts.items()):
             class_share[name] = cnt / len(records)
+    class_mttr = None
+    if repairs_by_class is not None and any(rep for rep in repairs_by_class):
+        if classes is not None:
+            names = [k.name for k in classes]
+        elif len(repairs_by_class) == 1:
+            names = ["default"]
+        else:
+            names = [f"class{i}" for i in range(len(repairs_by_class))]
+        class_mttr = {
+            nm: (float(np.mean(rep)) if len(rep) else float("nan"))
+            for nm, rep in zip(names, repairs_by_class)
+        }
+    n_failed = len(records) - len(done)
+    attempted = [r for r in records if r.n_attempts > 0]
+    mean_attempts = (
+        float(np.mean([r.n_attempts / r.n_tasks for r in attempted]))
+        if attempted
+        else 1.0
+    )
     p50, p99, p999 = tail_quantiles(soj, (50.0, 99.0, 99.9))
     return FleetStats(
         n_jobs=len(records),
@@ -141,7 +180,7 @@ def compute_stats(
         mean_wait=float(wait.mean()),
         mean_cost=float(cost.mean()),
         utilization=float(busy_time / (capacity * max(makespan, 1e-12))),
-        throughput=float(len(records) / max(makespan, 1e-12)),
+        throughput=float(len(latency_records) / max(makespan, 1e-12)),
         p50_sojourn=float(p50),
         p99_sojourn=float(p99),
         p999_sojourn=float(p999),
@@ -150,6 +189,10 @@ def compute_stats(
         n_preempted=int(sum(r.n_preempted for r in records)),
         class_utilization=class_util,
         class_job_share=class_share,
+        availability=float(1.0 - down_time / (capacity * max(makespan, 1e-12))),
+        failed_job_share=float(n_failed / len(records)),
+        mean_attempts=mean_attempts,
+        class_mttr=class_mttr,
     )
 
 

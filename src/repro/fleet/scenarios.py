@@ -9,12 +9,12 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.distributions import Distribution, Pareto, Uniform
+from repro.core.distributions import Distribution, Pareto, ShiftedExp, Uniform
 from repro.core.policy import BASELINE, SingleForkPolicy
 
-from .workload import Job, regime_shift_workload
+from .workload import Job, poisson_workload, regime_shift_workload
 
-__all__ = ["REGIME_SHIFT", "RegimeShiftScenario"]
+__all__ = ["CHAOS", "ChaosScenario", "REGIME_SHIFT", "RegimeShiftScenario"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,3 +60,57 @@ class RegimeShiftScenario:
 
 
 REGIME_SHIFT = RegimeShiftScenario()
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosScenario:
+    """Mid-run outage + task failures: the canonical chaos drill.
+
+    A steady Poisson stream on a single pool; at `outage_start` a fraction
+    `kill_frac` of the slots goes down for `outage_duration` (the
+    deterministic `ChaosSchedule`, so examples and tests can assert exact
+    windows), while every task attempt independently fails with
+    probability `q`.  The ladder under test: retries absorb task failures,
+    the shed guard (at `shed_rho`) drops best-effort arrivals while the
+    shrunken pool is saturated, and tails recover after the outage ends.
+    Shared by `examples/fleet_chaos.py`, `benchmarks/bench_fleet.py`'s
+    chaos lane, and `tests/test_faults.py`.
+    """
+
+    n_tasks: int = 16
+    capacity: int = 64  # 4 gang blocks
+    lam: float = 0.5
+    dist: Distribution = ShiftedExp(1.0, 1.0)  # Δ=1, mean 2
+    q: float = 0.05
+    kill_frac: float = 0.3
+    outage_start: float = 120.0
+    outage_duration: float = 120.0
+    shed_rho: float = 0.9
+    seed: int = 11
+    policy: SingleForkPolicy = SingleForkPolicy(0.1, 1, True)
+
+    def workload(self, n_jobs: int, priority_levels: int = 2) -> list[Job]:
+        """`priority_levels=2` gives the shed guard a best-effort class
+        (priority 1) to drop while priority 0 stays protected."""
+        return poisson_workload(
+            n_jobs, rate=self.lam, n_tasks=self.n_tasks, dist=self.dist,
+            seed=self.seed, priority_levels=priority_levels,
+        )
+
+    def fault(self):
+        from repro.faults import FaultSpec, schedule_for_kill_fraction
+
+        return FaultSpec(
+            q=self.q,
+            schedule=schedule_for_kill_fraction(
+                self.capacity, self.kill_frac,
+                start=self.outage_start, duration=self.outage_duration,
+            ),
+        )
+
+    @property
+    def outage_end(self) -> float:
+        return self.outage_start + self.outage_duration
+
+
+CHAOS = ChaosScenario()

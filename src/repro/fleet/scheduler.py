@@ -47,6 +47,38 @@ one.  The scheduler speaks the provider hook (`observe_arrival`,
 `record_job_complete`): pass a `fleet.adaptive.FleetPolicyController` for
 load-aware closed-loop control, or a legacy `core.adaptive.
 OnlinePolicyController` (adapted automatically via `as_policy_provider`).
+Providers additionally implementing `record_task_failure` are told about
+every failed attempt (so the fleet controller can re-plan on failure-rate
+drift, not just service-distribution drift).
+
+Chaos semantics (`fault=repro.faults.FaultSpec`, DESIGN.md §15):
+
+  * task-failure laws: each copy attempt fails with probability q
+    (discovered only when the attempt would have completed — the copy
+    burns its full drawn duration), or races a fail-time draw against its
+    service draw (`fail_dist`), failing early with partial work billed;
+  * retries: a failed copy is relaunched with a fresh service draw after
+    capped exponential backoff, up to `max_attempts` per copy lineage;
+    retries that find no free slot wait and are drained BEFORE new
+    admissions.  A task whose every lineage exhausts its budget makes the
+    job terminally `failed` (failure="max_attempts");
+  * machine faults: `machine_down` kills the newest running copies on the
+    victim class first (each killed copy fails through the same retry
+    path) and shrinks the free ledger; `machine_up` restores it.  Per-class
+    free/busy/reserved ledgers stay conserved throughout — downed slots are
+    accounted in `down_by_class`, never double-freed;
+  * deadlines: a job with `Job.deadline` is killed (failure="timeout") at
+    arrival + deadline whether queued or running;
+  * load shedding: with `shed_rho` set, arrivals of priority >=
+    `shed_min_priority` are rejected up front (failure="shed") while the
+    estimated gang-occupancy ρ̂ = λ̂·Ê[service]·n̄ / surviving weighted
+    slots exceeds the threshold — graceful degradation instead of an
+    unbounded queue when capacity is down.
+
+All of it is strictly opt-in: with `fault=None` (or a spec with nothing
+enabled), no deadline/shed knobs, the scheduler consumes the exact same
+RNG stream and emits the exact same event sequence as before — q=0 runs
+reproduce the historical engine event for event.
 """
 
 from __future__ import annotations
@@ -67,6 +99,7 @@ from repro.core.policy import (
     num_stragglers,
 )
 
+from repro.faults.model import FaultSpec
 from repro.obs import trace as _trace
 
 from .adaptive import as_policy_provider
@@ -90,6 +123,9 @@ class JobRecord:
     n_preempted: int  # copies cancelled by admission preemption
     policy: str
     machine_class: str = "default"  # class of the first original copy
+    n_attempts: int = 0  # total copy launches (originals + replicas + retries)
+    failed: bool = False  # terminal failure (never completed)
+    failure: str = ""  # "" | "max_attempts" | "timeout" | "shed"
 
     @property
     def sojourn(self) -> float:
@@ -111,14 +147,17 @@ class _Copy:
     fresh: bool  # replica (vs original)
     cls: int = 0  # machine-class index the copy's slot belongs to
     live: bool = True
+    attempts: int = 1  # which attempt of its lineage this copy is
+    will_fail: bool = False  # fault verdict, drawn at launch
 
 
 class _Task:
-    __slots__ = ("done", "copies")
+    __slots__ = ("done", "copies", "retry_events")
 
     def __init__(self):
         self.done = False
         self.copies: list[_Copy] = []
+        self.retry_events: list[Event] = []  # heap-pending retry launches
 
     @property
     def live_copies(self) -> list[_Copy]:
@@ -138,6 +177,7 @@ class _RunningJob:
         self.cost = 0.0
         self.n_replicas = 0
         self.n_preempted = 0
+        self.n_attempts = 0  # every copy launch, retries included
         self.fork_pending = False
         self.home_class = 0  # reservation class (aligned) / first-copy class
         self.classes_used: set = set()  # class indices any copy landed on
@@ -207,6 +247,9 @@ class FleetScheduler:
         placement: str = "pooled",
         recorder=None,  # repro.obs Recorder; None = the process-wide one
         obs_pid: int = _trace.PID_FLEET,
+        fault: Optional[FaultSpec] = None,  # chaos spec (None = no faults)
+        shed_rho: Optional[float] = None,  # load-shed ρ̂ threshold (None = off)
+        shed_min_priority: int = 1,  # only shed priorities >= this
     ):
         if classes is None:
             if capacity is None:
@@ -258,6 +301,18 @@ class FleetScheduler:
         self.obs_pid = obs_pid
         # decorrelated from workload generators that may share `seed`
         self.rng = np.random.default_rng((0x5C4ED, seed))
+        # chaos: a spec with nothing enabled is identical to no spec, and a
+        # disabled spec must not even create the fault RNG — the q=0 path's
+        # contract is bitwise identity with the historical engine (same
+        # self.rng consumption, same event sequence)
+        self.fault = fault if (fault is not None and fault.enabled) else None
+        self.fault_rng = (
+            np.random.default_rng((0xFA17, seed)) if self.fault is not None else None
+        )
+        if shed_rho is not None and not shed_rho > 0:
+            raise ValueError(f"shed_rho must be > 0, got {shed_rho}")
+        self.shed_rho = shed_rho
+        self.shed_min_priority = shed_min_priority
         # multi-scheduler drivers (the DAG engine) observe completions here
         # and may swap `heap` for an OwnedHeap view of a shared heap before
         # any event is pushed
@@ -269,6 +324,25 @@ class FleetScheduler:
         self.free_by_class = [k.slots for k in self.classes]
         self.reserved = [0] * len(self.classes)  # aligned-mode gang holds
         self.records: list[JobRecord] = []
+        # fault state: downed slots per class, retries waiting for a slot,
+        # repair durations (per-class MTTR), total slot-seconds of downtime
+        self.down_by_class = [0] * len(self.classes)
+        self.repairs_by_class: list[list[float]] = [[] for _ in self.classes]
+        self.down_time = 0.0  # integral of down slots over time (slot-seconds)
+        self._retry_waiting: list[tuple] = []  # (job_id, task_id, attempts)
+        self._arrivals_pending = 0  # crash renewal stops when work drains
+        # failure / degradation counters (mirrored to obs when enabled)
+        self.n_task_failures = 0
+        self.n_crash_kills = 0
+        self.n_retries = 0
+        self.n_failed = 0
+        self.n_timeouts = 0
+        self.n_shed = 0
+        # shed estimator state (only fed when shed_rho is set)
+        self._arrival_times: list[float] = []
+        self._svc_sum = 0.0
+        self._ntask_sum = 0.0
+        self._done_jobs = 0
         # instrumentation (conservation + utilization)
         self.max_busy = 0
         self.busy_time = 0.0  # integral of busy slots over time (copy-seconds)
@@ -294,6 +368,11 @@ class FleetScheduler:
             self.heap.recorder = rec
         for job in jobs:
             self.heap.push(job.arrival, "arrive", job)
+            if job.deadline is not None:
+                self.heap.push(job.arrival + job.deadline, "deadline", job)
+        self._arrivals_pending = len(jobs)
+        if self.fault is not None:
+            self._schedule_chaos()
         while self.heap:
             ev = self.heap.pop()
             if ev is None:
@@ -304,6 +383,11 @@ class FleetScheduler:
             raise RuntimeError(
                 f"jobs {stuck} can never be admitted "
                 f"(n_tasks > capacity={self.capacity}?)"
+            )
+        if self.running or self._retry_waiting:  # no-job-lost invariant
+            raise RuntimeError(
+                f"heap drained with {len(self.running)} running jobs and "
+                f"{len(self._retry_waiting)} waiting retries — a job was lost"
             )
         self.records.sort(key=lambda r: r.job_id)
         return self.records
@@ -319,16 +403,39 @@ class FleetScheduler:
         assert ev.time >= self.now - 1e-9, "event time went backwards"
         self.now = ev.time
         if ev.kind == "arrive":
+            if self._arrivals_pending:
+                self._arrivals_pending -= 1
             if self.controller is not None:
                 self.controller.observe_arrival(self.now)
-            self.queue.append(ev.data)
-            self._try_admit()
+            shed = False
+            if self.shed_rho is not None:
+                self._arrival_times.append(self.now)
+                if len(self._arrival_times) > 32:
+                    del self._arrival_times[0]
+                shed = self._should_shed(ev.data)
+            if shed:
+                self._shed_job(ev.data)
+            else:
+                self.queue.append(ev.data)
+                self._try_admit()
         elif ev.kind == "copy_done":
             self._on_copy_done(ev)
             self._try_admit()
         elif ev.kind == "fork":
             self._on_fork(ev)
             self._try_admit()  # a kill stage can net-free slots
+        elif ev.kind == "retry":
+            self._on_retry(ev)
+            self._try_admit()
+        elif ev.kind == "machine_down":
+            self._on_machine_down(ev)
+            self._try_admit()
+        elif ev.kind == "machine_up":
+            self._on_machine_up(ev)
+            self._try_admit()  # restored slots admit waiting work
+        elif ev.kind == "deadline":
+            self._on_deadline(ev)
+            self._try_admit()  # a killed job frees its slots
         else:  # pragma: no cover
             raise RuntimeError(f"unknown event kind {ev.kind}")
         rec = self._rec()
@@ -373,7 +480,8 @@ class FleetScheduler:
         for i in self._class_order:
             if restrict is not None and i != restrict:
                 continue
-            if self.classes[i].slots - self.reserved[i] >= job.n_tasks:
+            up = self.classes[i].slots - self.down_by_class[i]
+            if up - self.reserved[i] >= job.n_tasks:
                 return i
         return None
 
@@ -386,6 +494,8 @@ class FleetScheduler:
         return self.free >= job.n_tasks
 
     def _try_admit(self) -> None:
+        if self._retry_waiting:
+            self._drain_retries()  # failed work re-enters before new work
         while True:
             job = self._next_queued()
             if job is None:
@@ -506,21 +616,40 @@ class FleetScheduler:
                 return i
         raise AssertionError("launch with no free slot")
 
-    def _launch_copy(self, rjob: _RunningJob, task_id: int, duration: float, fresh: bool):
+    def _launch_copy(
+        self, rjob: _RunningJob, task_id: int, duration: float, fresh: bool,
+        attempts: int = 1,
+    ):
         """Launch one copy; `duration` is the base execution draw, stretched
         by the slot's class speed (overheads folded in by the caller scale
-        too: a slow machine is slow at forking as well)."""
+        too: a slow machine is slow at forking as well).
+
+        With task faults enabled the copy's fate is drawn NOW from the
+        decorrelated fault RNG: under the q law it fails with probability q
+        at what would have been its completion; under the fail-dist law a
+        fail-time draw races the service draw and an early loss truncates
+        the copy (partial work still billed)."""
         assert self.free > 0, "launch with no free slot"
         cls = self._pick_class(rjob)
         self.free_by_class[cls] -= 1
-        busy = self.capacity - self.free
+        busy = self.capacity - self.free - sum(self.down_by_class)
         self.max_busy = max(self.max_busy, busy)
-        wall = duration / self.classes[cls].speed
+        will_fail, run_for = False, duration
+        if self.fault is not None and self.fault.task_faults:
+            if self.fault.q > 0.0:
+                will_fail = bool(self.fault_rng.random() < self.fault.q)
+            else:
+                f = float(self.fault.fail_dist.quantile(self.fault_rng.random()))
+                if f < duration:
+                    will_fail, run_for = True, f
+        wall = run_for / self.classes[cls].speed
         ev = self.heap.push(self.now + wall, "copy_done", (rjob.job.job_id, task_id))
-        copy = _Copy(start=self.now, event=ev, fresh=fresh, cls=cls)
+        copy = _Copy(start=self.now, event=ev, fresh=fresh, cls=cls,
+                     attempts=attempts, will_fail=will_fail)
         rjob.tasks[task_id].copies.append(copy)
         rjob.classes_used.add(cls)
         rjob.n_live += 1
+        rjob.n_attempts += 1
         ev.data = (rjob.job.job_id, task_id, copy)
         if fresh:
             rjob.n_replicas += 1
@@ -548,6 +677,10 @@ class FleetScheduler:
         rjob = self.running.get(job_id)
         if rjob is None or not copy.live:
             return
+        if copy.will_fail:
+            # the attempt burned its slot and died; retry its lineage
+            self._fail_copy(rjob, task_id, copy, crash=False)
+            return
         task = rjob.tasks[task_id]
         assert not task.done, "finish event for a completed task survived"
         task.done = True
@@ -555,6 +688,11 @@ class FleetScheduler:
         self._bill_copy(rjob, copy)
         for c in task.live_copies:
             self._cancel_copy(rjob, c)
+        if task.retry_events:
+            # backoff-pending relaunches of this task are moot now
+            for rev in task.retry_events:
+                self.heap.cancel(rev)
+            task.retry_events.clear()
         rjob.n_done += 1
         if rjob.group_width is not None:
             rjob.group_done[task_id // rjob.group_width] += 1
@@ -634,8 +772,14 @@ class FleetScheduler:
                 for c in task.live_copies:
                     self._cancel_copy(rjob, c)
             if self.placement == "aligned":
-                # replicas draw from the job's own gang reservation only
-                budget = rjob.job.n_tasks - rjob.n_live
+                # replicas draw from the job's own gang reservation only —
+                # capped by physically-up slots (a crash can temporarily
+                # eat into reserved capacity; without faults the min() is
+                # always the reservation remainder)
+                budget = min(
+                    rjob.job.n_tasks - rjob.n_live,
+                    self.free_by_class[rjob.home_class],
+                )
             elif rjob.restrict is not None:
                 budget = self.free_by_class[rjob.restrict]
             else:
@@ -647,12 +791,327 @@ class FleetScheduler:
                 )
                 for dur in fresh:
                     self._launch_copy(rjob, i, float(dur) + self.fork_overhead, fresh=True)
-            if not task.live_copies:
+            if not task.live_copies and not self._task_retry_pending(job_id, i, task):
                 # killed with zero slots anywhere (can't happen: the kill
-                # freed one) — guard so a task is never silently lost
+                # freed one) — guard so a task is never silently lost.  A
+                # task whose lineage is in retry backoff is not lost.
                 raise RuntimeError(f"task {i} of job {job_id} left with no copy")
         # a later stage may already be due (its threshold <= current n_done)
         self._maybe_schedule_fork(rjob)
+
+    # ---------------------------------------------------------------- chaos
+    def _schedule_chaos(self) -> None:
+        """Seed the heap with the fault spec's machine-level events:
+        deterministic outage windows up front, and the first crash of each
+        (process × class) Poisson stream (renewed in `_on_machine_down`
+        while work remains, so the heap still drains)."""
+        f = self.fault
+        if f.schedule is not None:
+            for o in f.schedule.outages:
+                cls = None if o.klass is None else self._class_index(o.klass)
+                self.heap.push(o.time, "machine_down",
+                               (cls, o.n_slots, o.duration, None))
+        for pi, proc in enumerate(f.crashes):
+            for ci, k in enumerate(self.classes):
+                if proc.klass is not None and k.name != proc.klass:
+                    continue
+                gap = float(self.fault_rng.exponential(proc.mtbf / k.slots))
+                self.heap.push(gap, "machine_down", (ci, proc.n_slots, None, pi))
+
+    def _work_remaining(self) -> bool:
+        return bool(
+            self._arrivals_pending or self.running or self.queue
+            or self._retry_waiting
+        )
+
+    def _on_machine_down(self, ev: Event) -> None:
+        cls, n, duration, proc_idx = ev.data
+        if duration is None:  # stochastic crash: repair time drawn now
+            proc = self.fault.crashes[proc_idx]
+            duration = float(self.fault_rng.exponential(proc.mttr))
+        # an outage with no class pinned takes slots fastest-class-first
+        targets = [cls] if cls is not None else list(self._class_order)
+        remaining = n
+        for ci in targets:
+            if remaining <= 0:
+                break
+            avail = self.classes[ci].slots - self.down_by_class[ci]
+            take = min(remaining, avail)
+            if take > 0:
+                self._take_down(ci, take, duration)
+                remaining -= take
+        if proc_idx is not None and self._work_remaining():
+            proc = self.fault.crashes[proc_idx]
+            gap = float(
+                self.fault_rng.exponential(proc.mtbf / self.classes[cls].slots)
+            )
+            self.heap.push(self.now + gap, "machine_down",
+                           (cls, proc.n_slots, None, proc_idx))
+
+    def _take_down(self, ci: int, take: int, duration: float) -> None:
+        """Take `take` slots of class ci down for `duration`: free slots go
+        first; the shortfall kills the NEWEST running copies on the class
+        (each through the failure/retry path), so the oldest work — most
+        likely to be near completion — survives an outage."""
+        need_kill = take - self.free_by_class[ci]
+        if need_kill > 0:
+            victims = []
+            for rjob in self.running.values():
+                for ti, task in enumerate(rjob.tasks):
+                    for c in task.copies:
+                        if c.live and c.cls == ci:
+                            victims.append((c.start, c.event.seq, rjob, ti, c))
+            victims.sort(key=lambda v: (v[0], v[1]), reverse=True)
+            for _, _, rjob, ti, c in victims[:need_kill]:
+                if c.live:  # a cascade (job failure) may have settled it
+                    self._fail_copy(rjob, ti, c, crash=True)
+        assert self.free_by_class[ci] >= take, "outage broke slot conservation"
+        self.free_by_class[ci] -= take
+        self.down_by_class[ci] += take
+        self.down_time += take * duration
+        self.repairs_by_class[ci].append(duration)
+        self.heap.push(self.now + duration, "machine_up", (ci, take))
+        rec = self._rec()
+        if rec.enabled:
+            rec.count("machines_down", take)
+            rec.instant("machine_down", "scheduler", self.now, pid=self.obs_pid,
+                        args={"class": self.classes[ci].name, "n_slots": take,
+                              "mttr": round(duration, 6)})
+            rec.counter_sample("slots_down", self.now,
+                               sum(self.down_by_class), pid=self.obs_pid)
+
+    def _on_machine_up(self, ev: Event) -> None:
+        ci, n = ev.data
+        self.down_by_class[ci] -= n
+        self.free_by_class[ci] += n
+        assert self.down_by_class[ci] >= 0, "repair exceeded downed slots"
+        rec = self._rec()
+        if rec.enabled:
+            rec.count("machines_up", n)
+            rec.counter_sample("slots_down", self.now,
+                               sum(self.down_by_class), pid=self.obs_pid)
+
+    # -------------------------------------------------------------- retries
+    def _fail_copy(self, rjob: _RunningJob, task_id: int, copy: _Copy,
+                   crash: bool) -> None:
+        """One attempt died (task fault at completion, or crash kill now):
+        bill its partial work, then either schedule its lineage's relaunch
+        under the capped exponential backoff or — budget exhausted with no
+        surviving sibling — fail the whole job."""
+        if crash:
+            self.heap.cancel(copy.event)  # its finish will never happen
+        self._bill_copy(rjob, copy)
+        self.n_task_failures += 1
+        if crash:
+            self.n_crash_kills += 1
+        rec = self._rec()
+        if rec.enabled:
+            rec.count("task_failures")
+            if crash:
+                rec.count("crash_kills")
+        if self.controller is not None and hasattr(
+            self.controller, "record_task_failure"
+        ):
+            self.controller.record_task_failure(
+                machine_class=self.classes[copy.cls].name
+            )
+        task = rjob.tasks[task_id]
+        if task.done:
+            return  # a sibling already finished the task; nothing to retry
+        if copy.attempts < self.fault.max_attempts:
+            delay = self.fault.attempt_delay(copy.attempts)
+            rev = self.heap.push(
+                self.now + delay, "retry",
+                (rjob.job.job_id, task_id, copy.attempts + 1),
+            )
+            task.retry_events.append(rev)
+            self.n_retries += 1
+            if rec.enabled:
+                rec.count("retries")
+        elif not task.live_copies and not self._task_retry_pending(
+            rjob.job.job_id, task_id, task
+        ):
+            self._fail_job(rjob, "max_attempts")
+
+    def _task_retry_pending(self, job_id: int, task_id: int, task: _Task) -> bool:
+        if task.retry_events:
+            return True
+        return any(w[0] == job_id and w[1] == task_id for w in self._retry_waiting)
+
+    def _retry_slot_free(self, rjob: _RunningJob) -> bool:
+        if self.placement == "aligned":
+            return (
+                rjob.n_live < rjob.job.n_tasks
+                and self.free_by_class[rjob.home_class] > 0
+            )
+        if rjob.restrict is not None:
+            return self.free_by_class[rjob.restrict] > 0
+        return self.free > 0
+
+    def _launch_retry(self, rjob: _RunningJob, task_id: int, attempts: int) -> None:
+        # a fresh service draw from the fault RNG — the base stream stays
+        # byte-identical with the no-fault run
+        dur = float(rjob.job.dist.quantile(self.fault_rng.random()))
+        self._launch_copy(rjob, task_id, dur, fresh=False, attempts=attempts)
+
+    def _on_retry(self, ev: Event) -> None:
+        job_id, task_id, attempts = ev.data
+        rjob = self.running.get(job_id)
+        if rjob is None:
+            return  # job finished or failed during the backoff
+        task = rjob.tasks[task_id]
+        try:
+            task.retry_events.remove(ev)
+        except ValueError:
+            pass
+        if task.done:
+            return
+        if self._retry_slot_free(rjob):
+            self._launch_retry(rjob, task_id, attempts)
+        else:
+            # no slot (outage / full reservation): wait; drained ahead of
+            # new admissions on every slot-freeing event
+            self._retry_waiting.append((job_id, task_id, attempts))
+
+    def _drain_retries(self) -> None:
+        still = []
+        for item in self._retry_waiting:
+            job_id, task_id, attempts = item
+            rjob = self.running.get(job_id)
+            if rjob is None or rjob.tasks[task_id].done:
+                continue
+            if self._retry_slot_free(rjob):
+                self._launch_retry(rjob, task_id, attempts)
+            else:
+                still.append(item)
+        self._retry_waiting = still
+
+    # -------------------------------------------- degradation (shed/timeout)
+    def _should_shed(self, job: Job) -> bool:
+        """Shed when the estimated gang-occupancy ρ̂ — arrival rate ×
+        mean service time × mean gang width over surviving weighted slots —
+        exceeds `shed_rho`.  Needs 8 arrivals and 8 completions of history;
+        priorities below `shed_min_priority` are never shed."""
+        if job.priority < self.shed_min_priority:
+            return False
+        if len(self._arrival_times) < 8 or self._done_jobs < 8:
+            return False
+        span = self._arrival_times[-1] - self._arrival_times[0]
+        if span <= 0:
+            return False
+        lam_hat = (len(self._arrival_times) - 1) / span
+        mean_svc = self._svc_sum / self._done_jobs
+        mean_gang = self._ntask_sum / self._done_jobs
+        surviving = sum(
+            (k.slots - self.down_by_class[i]) * k.speed
+            for i, k in enumerate(self.classes)
+        )
+        if surviving <= 0:
+            return True
+        return lam_hat * mean_svc * mean_gang / surviving > self.shed_rho
+
+    def _shed_job(self, job: Job) -> None:
+        self.n_shed += 1
+        self._record_unstarted(job, "shed")
+        rec = self._rec()
+        if rec.enabled:
+            rec.count("jobs_shed")
+            rec.instant("shed", "scheduler", self.now, pid=self.obs_pid,
+                        tid=job.job_id)
+
+    def _on_deadline(self, ev: Event) -> None:
+        job = ev.data
+        rjob = self.running.get(job.job_id)
+        if rjob is not None:
+            self.n_timeouts += 1
+            self._fail_job(rjob, "timeout")
+            return
+        for i, queued in enumerate(self.queue):
+            if queued.job_id == job.job_id:
+                del self.queue[i]
+                self.n_timeouts += 1
+                self._record_unstarted(job, "timeout")
+                return
+        # already terminal (completed, failed, or shed) — nothing to kill
+
+    def _record_unstarted(self, job: Job, reason: str) -> None:
+        """Terminal record for a job killed before any copy launched."""
+        record = JobRecord(
+            job_id=job.job_id,
+            arrival=job.arrival,
+            start=self.now,
+            finish=self.now,
+            n_tasks=job.n_tasks,
+            cost=0.0,
+            n_replicas=0,
+            n_preempted=0,
+            policy="-",
+            machine_class="unplaced",
+            n_attempts=0,
+            failed=True,
+            failure=reason,
+        )
+        self.records.append(record)
+        self.n_failed += 1
+        rec = self._rec()
+        if rec.enabled:
+            rec.count("jobs_failed")
+        if self.controller is not None:
+            self.controller.record_job_complete(
+                n_tasks=job.n_tasks, machine_class="unplaced", now=self.now
+            )
+        if self.job_done_hook is not None:
+            self.job_done_hook(record)
+
+    def _fail_job(self, rjob: _RunningJob, reason: str) -> None:
+        """Terminal failure of a running job: settle every live copy and
+        pending retry, release the reservation, record `failed`."""
+        job = rjob.job
+        for task in rjob.tasks:
+            for c in task.live_copies:
+                self._cancel_copy(rjob, c)
+            if task.retry_events:
+                for rev in task.retry_events:
+                    self.heap.cancel(rev)
+                task.retry_events.clear()
+        if self._retry_waiting:
+            self._retry_waiting = [
+                w for w in self._retry_waiting if w[0] != job.job_id
+            ]
+        del self.running[job.job_id]
+        if self.placement == "aligned":
+            self.reserved[rjob.home_class] -= job.n_tasks
+        cls_name = ("mixed" if len(rjob.classes_used) > 1
+                    else self.classes[rjob.home_class].name)
+        record = JobRecord(
+            job_id=job.job_id,
+            arrival=job.arrival,
+            start=rjob.t_start,
+            finish=self.now,
+            n_tasks=job.n_tasks,
+            cost=rjob.cost / job.n_tasks,
+            n_replicas=rjob.n_replicas,
+            n_preempted=rjob.n_preempted,
+            policy=getattr(rjob, "policy_label", "?"),
+            machine_class=cls_name,
+            n_attempts=rjob.n_attempts,
+            failed=True,
+            failure=reason,
+        )
+        self.records.append(record)
+        self.n_failed += 1
+        rec = self._rec()
+        if rec.enabled:
+            rec.count("jobs_failed")
+            rec.instant("job_failed", "scheduler", self.now, pid=self.obs_pid,
+                        tid=job.job_id, args={"reason": reason,
+                                              "n_attempts": rjob.n_attempts})
+        if self.controller is not None:
+            self.controller.record_job_complete(
+                n_tasks=job.n_tasks, machine_class=cls_name, now=self.now
+            )
+        if self.job_done_hook is not None:
+            self.job_done_hook(record)
 
     # --------------------------------------------------------------- finish
     def _finish_job(self, rjob: _RunningJob) -> None:
@@ -678,8 +1137,13 @@ class FleetScheduler:
             n_preempted=rjob.n_preempted,
             policy=getattr(rjob, "policy_label", "?"),
             machine_class=cls_name,
+            n_attempts=rjob.n_attempts,
         )
         self.records.append(rec)
+        if self.shed_rho is not None:
+            self._svc_sum += rec.service
+            self._ntask_sum += job.n_tasks
+            self._done_jobs += 1
         trec = self._rec()
         if trec.enabled:
             # the job-lifecycle spans: "job" is the parent (arrival→finish),

@@ -87,6 +87,8 @@ __all__ = [
     "lindley",
     "masked_single_fork",
     "policy_search",
+    "retry_draws",
+    "retry_transform",
     "sweep",
     "sweep_loop",
     "trace_kill_rollout",
@@ -501,6 +503,40 @@ def masked_single_fork(x_sorted, fresh, k, r, keep):
     return T, C
 
 
+def retry_draws(key, quantile, shape, attempts: int):
+    """Shared-CRN draw pair for the geometric-retry transform.
+
+    Returns (x: shape+(attempts,), v: shape+(attempts-1,)): per logical
+    draw, `attempts` candidate service times through the inverse transform
+    and `attempts-1` fate uniforms.  The draws carry no q — a whole
+    (λ × q × π) grid shares ONE pair and each cell applies
+    `retry_transform` with its own traced q, which is exactly the
+    common-random-numbers structure the fused frontier needs: the argmin
+    over cells compares the same failure fates at different q thresholds.
+    """
+    ku, kv = jax.random.split(key)
+    x = quantile(jax.random.uniform(ku, shape + (attempts,)))
+    v = jax.random.uniform(kv, shape + (attempts - 1,))
+    return x, v
+
+
+def retry_transform(x, v, q):
+    """Effective busy time of a copy under the q failure law (traced q).
+
+    Attempt k+1 runs iff attempts 1..k all failed (v[..., k-1] < q each),
+    so alive = cumprod(v < q) and the effective duration is the geometric
+    sum x[..., 0] + Σ_k alive_k · x[..., k+1].  With immediate relaunch
+    (backoff_base == 0) this IS the copy's slot busy time, so the result
+    feeds `masked_single_fork` / `lowered_policy_eval` unchanged and both
+    T and C (Definition 2 bills every attempt's wall-clock) stay exact
+    against the event engine.  The final attempt is deemed successful —
+    a truncation bias of order q**(attempts-1), negligible at the default
+    max_attempts=8.  attempts=1 degenerates to x[..., 0] (no retries).
+    """
+    alive = jnp.cumprod((v < q).astype(x.dtype), axis=-1)
+    return x[..., 0] + jnp.sum(alive * x[..., 1:], axis=-1)
+
+
 def fork_draws(key, quantile, shape, n: int, r_cap: int):
     """The common-random-number draw pair `masked_single_fork` consumes.
 
@@ -659,6 +695,119 @@ def _frontier_jit(
     return jax.vmap(cellstats)(arrivals, starts, fins, slots, svc, T, C, lams)
 
 
+@partial(
+    jax.jit,
+    static_argnames=(
+        "dist", "n", "n_jobs", "m_trials", "r_cap", "n_stages", "attempts",
+        "kernel", "hist",
+    ),
+)
+def _frontier_faulty_jit(
+    key, xs, modes, ks, ts, rs, keeps, ds, lams, qs, speeds, slot_class,
+    class_slots, dist, n, n_jobs, m_trials, r_cap, n_stages, attempts, kernel,
+    hist=None,
+):
+    """`_frontier_jit` under the q task-failure law: every draw goes through
+    the geometric-retry transform with the CELL's traced q before entering
+    the policy evaluator, so a (λ × q × π) grid is still one device program
+    on one shared draw set.  The queue/stats tail below deliberately
+    DUPLICATES `_frontier_jit`'s — sharing a helper would re-fuse the
+    no-fault program and risk the bit-identity contract the bench gate pins
+    (fault=None never routes here; `_eval_cells` selects host-side).
+
+    The transform needs effective duration == slot busy time, which only
+    holds for immediate relaunch — `frontier` rejects backoff_base != 0
+    before dispatch.  attempts (static: draw-shape width) is the shared
+    max_attempts of the grid's FaultSpecs.
+    """
+    ka, kf = jax.random.split(key)
+    quantile = dist.quantile if dist is not None else partial(emp_quantile, xs)
+    kx, ky = jax.random.split(kf)
+    expo_cum = jnp.cumsum(jax.random.exponential(ka, (m_trials, n_jobs)), axis=1)
+    if modes is None:
+        xr, xv = retry_draws(kx, quantile, (m_trials, n_jobs, n), attempts)
+        fr, fv = retry_draws(ky, quantile, (m_trials, n_jobs, n, r_cap), attempts)
+
+        def tc(k, r, keep, lam, q):
+            x_sorted = jnp.sort(retry_transform(xr, xv, q), axis=-1)
+            fresh = retry_transform(fr, fv, q)
+            T, C = masked_single_fork(x_sorted, fresh, k, r, keep)
+            return expo_cum / lam, T, C
+
+        arrivals, T, C = jax.vmap(tc)(ks, rs, keeps, lams, qs)  # each (cells, m, J)
+    else:
+        xr, xv = retry_draws(kx, quantile, (m_trials, n_jobs, n), attempts)
+        fr, fv = retry_draws(
+            ky, quantile, (m_trials, n_jobs, n_stages, n, r_cap), attempts
+        )
+
+        def tc(mode, k, t, r, keep, d, lam, q):
+            x = retry_transform(xr, xv, q)
+            fresh = retry_transform(fr, fv, q)
+            T, C = lowered_policy_eval(x, fresh, mode, k, t, r, keep, d)
+            return expo_cum / lam, T, C
+
+        # each (cells, m, J)
+        arrivals, T, C = jax.vmap(tc)(modes, ks, ts, rs, keeps, ds, lams, qs)
+
+    c = speeds.shape[0]
+    starts, fins, svc, slots = batched_queue(arrivals, T, speeds, kernel=kernel)
+
+    n_classes = class_slots.shape[0]
+
+    def cellstats(a, st, fi, sl, sv, Tc, Cc, lam):
+        soj = fi - a
+        wait = st - a
+        cost = Cc / speeds[sl]
+        makespan = jnp.max(fi, axis=1) - a[:, 0]  # per trial
+        denom = jnp.maximum(makespan, 1e-12)
+        busy = cost * n  # copy-seconds per job (Definition 2)
+        total_busy = jnp.sum(busy, axis=1)  # per trial
+        util = jnp.mean(total_busy / (c * n * denom))
+
+        if c == 1:  # static: one slot, one class — no segment reductions
+            class_util = jnp.mean(total_busy[:, None] / (class_slots * denom[:, None]), axis=0)
+        else:
+
+            def trial_class_util(b_row, sl_row, dn):
+                slot_busy = jax.ops.segment_sum(b_row, sl_row, num_segments=c)
+                class_busy = jax.ops.segment_sum(
+                    slot_busy, slot_class, num_segments=n_classes
+                )
+                return class_busy / (class_slots * dn)
+
+            class_util = jnp.mean(jax.vmap(trial_class_util)(busy, sl, denom), axis=0)
+        per_trial = jnp.mean(soj, axis=1)
+        m = per_trial.shape[0]
+        rho_work = lam * jnp.mean(Cc) / jnp.sum(speeds)
+        rho_block = lam * jnp.mean(Tc) / jnp.sum(speeds)
+        base = jnp.stack(
+            [
+                jnp.mean(soj),
+                jnp.mean(wait),
+                jnp.mean(sv),
+                jnp.mean(cost),
+                util,
+                jnp.std(per_trial) / jnp.sqrt(max(m - 1, 1)),
+                jnp.maximum(rho_work, rho_block),
+                rho_work,
+                rho_block,
+            ]
+        )
+        if hist is None:
+            return jnp.concatenate([base, class_util]), soj
+        from repro.obs.device import device_histogram
+
+        s_counts, s_min, s_max, s_sum = device_histogram(soj, hist)
+        c_counts, c_min, c_max, c_sum = device_histogram(cost, hist)
+        return jnp.concatenate([base, class_util]), (
+            s_counts, jnp.stack([s_min, s_max, s_sum]),
+            c_counts, jnp.stack([c_min, c_max, c_sum]),
+        )
+
+    return jax.vmap(cellstats)(arrivals, starts, fins, slots, svc, T, C, lams)
+
+
 def as_quantile_source(dist_or_samples):
     """Normalize the frontier's first argument: (static_dist | None, xs).
 
@@ -700,9 +849,15 @@ def _eval_cells(
     r_cap: Optional[int],
     pad_cells: bool,
     tail="exact",
+    cell_qs: Optional[Sequence[float]] = None,
+    attempts: Optional[int] = None,
 ) -> list[dict]:
     """Shared engine behind `frontier` and `policy_search`: one stats dict
     per (policy, λ) cell, computed by a single `_frontier_jit` dispatch.
+    `cell_qs` (one per cell, with the static draw width `attempts`) routes
+    the grid through `_frontier_faulty_jit` instead — the q failure law via
+    the geometric-retry transform; cell_qs=None never touches the faulty
+    program, preserving the historical engine's bit-identity.
 
     `tail` selects how the percentile keys are computed: "exact" pulls the
     full sojourn matrices host-side (np.partition semantics, bit-exact);
@@ -740,6 +895,13 @@ def _eval_cells(
         raise ValueError(f"r_cap={r_cap} < r_max+1={r_max + 1}")
     lams = [float(lam) for lam in cell_lams]
     lams.extend([lams[0]] * (n_padded - n_cells))
+    if cell_qs is not None:
+        if len(cell_qs) != n_cells:
+            raise ValueError("need one q per cell")
+        if attempts is None or attempts < 1:
+            raise ValueError("cell_qs needs a static attempts >= 1")
+        qs = [float(q) for q in cell_qs]
+        qs.extend([qs[0]] * (n_padded - n_cells))
 
     from repro.obs.device import HistSpec, DEFAULT_HIST, sketch_from_device
 
@@ -775,11 +937,19 @@ def _eval_cells(
             None, jnp.asarray(lowered.k[:, 0]), None,
             jnp.asarray(lowered.r[:, 0]), jnp.asarray(lowered.keep[:, 0]), None,
         )
-    stats, payload = _frontier_jit(
-        key, xs, *pol_args,
-        jnp.array(lams), speeds, slot_class, class_slots,
-        dist, n, n_jobs, m_trials, r_cap, lowered.n_stages, kernel, hist=hist,
-    )
+    if cell_qs is None:
+        stats, payload = _frontier_jit(
+            key, xs, *pol_args,
+            jnp.array(lams), speeds, slot_class, class_slots,
+            dist, n, n_jobs, m_trials, r_cap, lowered.n_stages, kernel, hist=hist,
+        )
+    else:
+        stats, payload = _frontier_faulty_jit(
+            key, xs, *pol_args,
+            jnp.array(lams), jnp.array(qs), speeds, slot_class, class_slots,
+            dist, n, n_jobs, m_trials, r_cap, lowered.n_stages, attempts,
+            kernel, hist=hist,
+        )
     if rec.enabled:
         jax.block_until_ready((stats, payload))
         rec.span(
@@ -809,6 +979,8 @@ def _eval_cells(
         row = stats[i]
         d = dict(lam=float(lam), policy=pol.label(),
                  **dict(zip(_FRONTIER_JIT_KEYS, map(float, row[:nk]))))
+        if cell_qs is not None:
+            d["q"] = float(cell_qs[i])
         d["p50"], d["p99"], d["p999"] = (float(pcts[j, i]) for j in range(3))
         if cost_pcts is not None:
             d["cost_p50"], d["cost_p99"], d["cost_p999"] = (
@@ -819,6 +991,51 @@ def _eval_cells(
                 d[f"util_{name}"] = float(u)
         rows.append(d)
     return rows
+
+
+def _fault_qs(fault):
+    """Normalize `frontier`'s fault argument to (qs, attempts).
+
+    Accepts one `repro.faults.FaultSpec` or a sequence of them (a q grid
+    axis).  The fused engines model exactly the q law with immediate
+    relaunch — anything else is event-engine territory, rejected here with
+    a pointer at the right tool rather than silently approximated.
+    """
+    from repro.faults.model import FaultSpec
+
+    specs = [fault] if isinstance(fault, FaultSpec) else list(fault)
+    if not specs:
+        raise ValueError("need at least one FaultSpec")
+    qs = []
+    attempts = None
+    for f in specs:
+        if not isinstance(f, FaultSpec):
+            raise TypeError(f"fault entries must be FaultSpec, got {type(f)}")
+        if f.fail_dist is not None:
+            raise ValueError(
+                "the fused engines model the q failure law only; fail_dist "
+                "runs exactly on the event engine (FleetSim)"
+            )
+        if f.machine_faults:
+            raise ValueError(
+                "machine crashes run exactly on the event engine (FleetSim); "
+                "for a fused grid fold the crash hazard into q via "
+                "repro.faults.effective_fail_prob"
+            )
+        if f.backoff_base != 0.0:
+            raise ValueError(
+                "the fused retry transform models immediate relaunch "
+                "(backoff_base == 0); nonzero backoff runs on the event engine"
+            )
+        if attempts is None:
+            attempts = f.max_attempts
+        elif f.max_attempts != attempts:
+            raise ValueError(
+                "all FaultSpecs in one fused grid must share max_attempts "
+                "(it is the static retry-draw width)"
+            )
+        qs.append(float(f.q))
+    return qs, attempts
 
 
 def frontier(
@@ -835,6 +1052,7 @@ def frontier(
     r_cap: Optional[int] = None,
     pad_cells: bool = True,
     tail="exact",
+    fault=None,
 ) -> list[dict]:
     """Latency–cost frontier: the whole (policy × λ) cross-product as ONE
     fused device program over shared common-random-number draws.
@@ -861,6 +1079,13 @@ def frontier(
     `kernels.kw_queue` kernel, (trials × cells) tiled across its grid.
     `tail="hist"` computes the percentile keys from in-program γ-bucket
     histograms instead of the raw sojourn matrices (see `_eval_cells`).
+
+    `fault` — a `repro.faults.FaultSpec` or a sequence of them — adds a q
+    failure-law axis: cells = policies × λs × faults (q fastest), every
+    draw goes through the geometric-retry transform with its cell's q, and
+    rows gain a "q" key.  A single disabled spec (q=0, no machine faults)
+    takes the exact historical program, so the rows are bitwise identical
+    to fault=None (the reduction `bench_fleet` gates).
     """
     policies = list(policies)
     lams = [float(lam) for lam in lams]
@@ -868,9 +1093,25 @@ def frontier(
         raise ValueError("need at least one arrival rate")
     cell_policies = [pol for pol in policies for _ in lams]
     cell_lams = lams * len(policies)
+    cell_qs = attempts = None
+    if fault is not None:
+        qs, attempts = _fault_qs(fault)
+        if len(qs) == 1 and qs[0] == 0.0:
+            # disabled spec: exact historical program, bitwise-equal rows
+            rows = _eval_cells(
+                dist_or_samples, cell_policies, cell_lams, n, n_jobs, m_trials,
+                key, c, classes, kernel, r_cap, pad_cells, tail=tail,
+            )
+            for row in rows:
+                row["q"] = 0.0
+            return rows
+        cell_policies = [pol for pol in cell_policies for _ in qs]
+        cell_lams = [lam for lam in cell_lams for _ in qs]
+        cell_qs = qs * (len(policies) * len(lams))
     return _eval_cells(
         dist_or_samples, cell_policies, cell_lams, n, n_jobs, m_trials, key,
         c, classes, kernel, r_cap, pad_cells, tail=tail,
+        cell_qs=cell_qs, attempts=attempts,
     )
 
 
@@ -953,6 +1194,7 @@ def policy_search(
     r_cap: Optional[int] = None,
     pad_candidates: bool = True,
     tail="exact",
+    fault=None,
 ) -> list[dict]:
     """Score candidate policies on an empirical trace at an estimated load.
 
@@ -976,13 +1218,28 @@ def policy_search(
     speeds, the bound that actually governs the aligned/KW queue), and
     `rho` = max of the two; `rho >= 1` marks a policy this fleet cannot
     absorb at `lam`.
+
+    `fault` (a single `repro.faults.FaultSpec`, q law only) makes the
+    search failure-aware: every candidate is scored under the geometric-
+    retry transform at the spec's q — the controller's re-plan on
+    failure-rate drift passes its estimated q̂ here.
     """
     if lam <= 0:
         raise ValueError("arrival rate lam must be > 0")
     candidates = list(candidates)
+    cell_qs = attempts = None
+    if fault is not None:
+        qs, attempts = _fault_qs(fault)
+        if len(qs) != 1:
+            raise ValueError("policy_search takes a single FaultSpec")
+        if qs[0] == 0.0:
+            cell_qs = attempts = None  # disabled: exact historical program
+        else:
+            cell_qs = qs * len(candidates)
     rows = _eval_cells(
         samples, candidates, [float(lam)] * len(candidates), n, n_jobs, m_trials,
         key, c, classes, kernel, r_cap, pad_candidates, tail=tail,
+        cell_qs=cell_qs, attempts=attempts,
     )
     out = []
     for pol, row in zip(candidates, rows):

@@ -85,12 +85,18 @@ class Job:
     dist: Distribution
     policy: Optional[Policy] = None  # None -> scheduler default / controller
     priority: int = 0  # lower value = more urgent (priority discipline)
+    # relative completion deadline: the job is killed (terminal `failed`,
+    # failure="timeout") if not finished by arrival + deadline; None = no
+    # deadline.  The serving layer maps per-priority-class deadlines here.
+    deadline: Optional[float] = None
 
     def __post_init__(self):
         if self.n_tasks < 1:
             raise ValueError(f"job {self.job_id}: n_tasks must be >= 1")
         if self.arrival < 0:
             raise ValueError(f"job {self.job_id}: negative arrival time")
+        if self.deadline is not None and not self.deadline > 0:
+            raise ValueError(f"job {self.job_id}: deadline must be > 0")
 
 
 def poisson_workload(

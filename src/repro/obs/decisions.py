@@ -1,9 +1,11 @@
 """Structured decision log for the adaptive controller.
 
 `FleetPolicyController` makes four kinds of decisions worth auditing —
-re-plans (which policy won and why), KS drift flushes (the reservoir was
-discarded), ε-greedy explorations (a deliberately suboptimal probe), and
-ρ-guard vetoes (candidates rejected for saturating the fleet).  Until now
+re-plans (which policy won and why), drift flushes (the service-time
+reservoir discarded on a KS shift, trigger="ks", or the attempt-outcome
+window halved on a failure-rate shift, trigger="failure_rate"), ε-greedy
+explorations (a deliberately suboptimal probe), and ρ-guard vetoes
+(candidates rejected for saturating the fleet).  Until now
 those were visible only as an ad-hoc list comprehension over
 `controller.history` inside `bench_fleet`; `DecisionLog` makes them a
 first-class, filterable, export-ready record that also lands on the trace
@@ -34,10 +36,11 @@ class DecisionEvent:
     t: float                  # sim time of the decision
     kind: str                 # replan | drift | explore | veto
     label: str                # chosen policy label (or vetoed candidate)
-    trigger: str = ""         # what initiated it: periodic | drift | probe
+    trigger: str = ""         # periodic | ks | failure_rate | probe | ...
     lam_hat: float = float("nan")   # arrival-rate estimate at decision time
     rho: float = float("nan")       # predicted utilization of the choice
-    ks_stat: float = float("nan")   # KS statistic (drift events)
+    ks_stat: float = float("nan")   # drift statistic (KS, or |Δq̂| for
+    #                                 failure_rate drift events)
     n_samples: int = 0              # samples backing the estimate
     n_vetoed: int = 0               # candidates the ρ-guard rejected
     args: Optional[dict] = None     # anything extra (per-class labels, ...)

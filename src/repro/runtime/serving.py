@@ -86,13 +86,19 @@ class HedgedServer:
 
 @dataclasses.dataclass
 class BatchOutcome:
-    """One served batch in fleet mode: values + its queueing telemetry."""
+    """One served batch in fleet mode: values + its queueing telemetry.
+
+    Under chaos / graceful degradation a batch may not be served at all:
+    `failed=True` with `failure` in {"shed", "timeout", "max_attempts"}
+    and an empty `values` list (the serve_fn never ran for it)."""
 
     values: list
     arrival: float
     start: float
     finish: float
     cost: float
+    failed: bool = False
+    failure: str = ""
 
     @property
     def sojourn(self) -> float:
@@ -123,6 +129,10 @@ class FleetHedgedServer:
         placement: str = "pooled",
         dag=None,
         obs=None,
+        deadlines: Optional[dict] = None,
+        fault=None,
+        shed_rho: Optional[float] = None,
+        shed_min_priority: int = 1,
     ):
         """`capacity` is a single homogeneous replica pool; alternatively
         pass `classes` (a sequence of `repro.fleet.MachineClass`, e.g. a
@@ -156,15 +166,34 @@ class FleetHedgedServer:
         True → fresh private Recorder, a Recorder → that one) and is
         handed to the backing sim; serving-side tail latencies are kept
         per priority class in `self.metrics` regardless (see
-        `tail_latencies`)."""
+        `tail_latencies`).
+
+        Graceful degradation (the chaos-aware serving ladder):
+        `deadlines` maps a priority class to a relative completion deadline
+        — a batch not finished by arrival + deadline is killed (timeout);
+        `fault` is a `repro.faults.FaultSpec` executed by the backing fleet
+        (crashes, retries, task failures); `shed_rho` turns on admission
+        load-shedding for priorities >= `shed_min_priority` whenever the
+        estimated occupancy exceeds it.  Shed / timed-out / failed batches
+        come back as `BatchOutcome(failed=True)` and land in the
+        serve.shed / serve.timeout / serve.failed counters alongside the
+        fleet.availability / fleet.mttr gauges in `self.metrics`."""
         from repro.fleet import FleetConfig, FleetSim
 
         self.metrics = MetricsRegistry()
         self._obs = obs
+        self.deadlines = dict(deadlines) if deadlines else {}
 
         if dag is not None:
             from repro.dag import DagFleetConfig, DagFleetSim
 
+            if deadlines or fault is not None or shed_rho is not None:
+                raise ValueError(
+                    "dag mode: deadlines/fault/shed_rho are single-pool "
+                    "fleet knobs; chaos for pipelines runs through "
+                    "dag.rollout.dag_frontier(fault=...) or per-stage "
+                    "FleetSim configs"
+                )
             if capacity is not None or classes is not None or latency_dist is not None:
                 raise ValueError(
                     "dag mode: capacity/classes/latency_dist come from the "
@@ -213,6 +242,9 @@ class FleetHedgedServer:
                 classes=classes,
                 placement=placement,
                 obs=obs,
+                fault=fault,
+                shed_rho=shed_rho,
+                shed_min_priority=shed_min_priority,
             )
         )
 
@@ -272,6 +304,7 @@ class FleetHedgedServer:
                 n_tasks=len(b),
                 dist=self.latency_dist,
                 priority=int(priorities[i]),
+                deadline=self.deadlines.get(int(priorities[i])),
             )
             for i, b in enumerate(batches)
         ]
@@ -280,21 +313,46 @@ class FleetHedgedServer:
         for rec, batch in zip(report.records, batches):
             outcomes.append(
                 BatchOutcome(
-                    values=[self.serve_fn(r) for r in batch],
+                    # a shed / timed-out / failed batch was never served —
+                    # no values, and the caller sees failed=True + why
+                    values=[] if rec.failed else [self.serve_fn(r) for r in batch],
                     arrival=rec.arrival,
                     start=rec.start,
                     finish=rec.finish,
                     cost=rec.cost,
+                    failed=rec.failed,
+                    failure=rec.failure,
                 )
             )
+        self._observe_degradation(report)
         self._observe_latencies(outcomes, priorities)
         return outcomes, report.stats
 
     def _observe_latencies(self, outcomes, priorities) -> None:
         for out, pri in zip(outcomes, priorities):
+            if out.failed:  # shed/timeout records carry no served latency
+                continue
             self.metrics.histogram(
                 "serve.sojourn", labels={"priority": str(int(pri))}
             ).observe(out.sojourn)
+
+    def _observe_degradation(self, report) -> None:
+        """Chaos / degradation telemetry into the serving registry: how many
+        batches the ladder dropped and how healthy the pool was."""
+        if report.n_shed:
+            self.metrics.counter("serve.shed").inc(report.n_shed)
+        if report.n_timeouts:
+            self.metrics.counter("serve.timeout").inc(report.n_timeouts)
+        if report.n_failed:
+            self.metrics.counter("serve.failed").inc(report.n_failed)
+        if report.n_retries:
+            self.metrics.counter("serve.retries").inc(report.n_retries)
+        stats = report.stats
+        self.metrics.gauge("fleet.availability").set(stats.availability)
+        if stats.class_mttr:
+            vals = [v for v in stats.class_mttr.values() if v == v]
+            if vals:
+                self.metrics.gauge("fleet.mttr").set(float(np.mean(vals)))
 
     def tail_latencies(self) -> dict:
         """Live per-priority-class latency tails from the streaming sketch:
