@@ -459,12 +459,18 @@ def _eval_dag_cells(
         pcts = np.percentile(soj, (50.0, 99.0, 99.9), axis=1)
         cost_pcts = None
     else:
+        from repro.obs.evtail import evt_keys
+
         s_counts, s_agg, c_counts, c_agg = (np.asarray(p)[:n_cells] for p in payload)
         pcts = np.empty((3, n_cells))
         cost_pcts = np.empty((3, n_cells))
+        # hist rows also carry the EVT tail extension (same contract as
+        # the fleet frontier): GPD on the end-to-end sojourn sketch
+        cell_evt = []
         for i in range(n_cells):
             sk = sketch_from_device(s_counts[i], *s_agg[i], spec=hist)
             pcts[:, i] = sk.quantiles((0.5, 0.99, 0.999))
+            cell_evt.append(evt_keys(sk))
             ck = sketch_from_device(c_counts[i], *c_agg[i], spec=hist)
             cost_pcts[:, i] = ck.quantiles((0.5, 0.99, 0.999))
     rows = []
@@ -484,6 +490,7 @@ def _eval_dag_cells(
             row["cost_p50"], row["cost_p99"], row["cost_p999"] = (
                 float(cost_pcts[j, i]) for j in range(3)
             )
+            row.update(cell_evt[i])
         for s, spec in enumerate(dag.stages):
             off = nk + s * nsk
             for j, k in enumerate(_DAG_STAGE_KEYS):

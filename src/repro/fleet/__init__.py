@@ -46,9 +46,11 @@ from repro.faults import (  # noqa: F401
 from .metrics import (  # noqa: F401
     DagStats,
     FleetStats,
+    class_sojourn_sketches,
     compute_dag_stats,
     compute_stats,
     dag_critical_path_shares,
+    straggler_blame,
     tail_quantiles,
 )
 from .fleet import FleetConfig, FleetReport, FleetSim, run_fleet  # noqa: F401
@@ -88,11 +90,13 @@ __all__ = [
     "RegimeShiftScenario",
     "as_policy_provider",
     "bursty_workload",
+    "class_sojourn_sketches",
     "effective_fail_prob",
     "schedule_for_kill_fraction",
     "compute_dag_stats",
     "compute_stats",
     "dag_critical_path_shares",
+    "straggler_blame",
     "diurnal_workload",
     "fleet_rollout",
     "frontier",

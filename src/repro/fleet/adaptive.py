@@ -36,7 +36,13 @@ load-dependent (Aktaş et al., "Which Clones Should Attack and When?";
     the controller is never stuck at p = 0;
   * heterogeneous fleets get per-class policies: each machine class is
     re-searched at its share of λ̂ with its own speed and block count, and
-    `policy_for(job, machine_class=...)` serves the class-specific pick.
+    `policy_for(job, machine_class=...)` serves the class-specific pick;
+  * straggler blame (`repro.obs.blame`): completed-job sojourns are
+    attributed per class, the counterfactual tail score names the class
+    dragging the fleet tail, every re-plan surfaces it as a `blame`
+    decision event, and `blame_target=True` escalates that class's pick
+    to a replicating policy — replication aimed at the machines that
+    actually straggle.
 
 The controller implements the scheduler's policy-provider hook
 (`fleet.scheduler.FleetScheduler`); `as_policy_provider` adapts the legacy
@@ -139,6 +145,15 @@ class FleetPolicyController:
     search_trials: int = 8  # independent fleets per candidate
     use_kernel: bool = False  # queue recursions via the Pallas kw_queue kernel
     seed: int = 0
+    # straggler blame (repro.obs.blame): completed-job sojourns are
+    # attributed per machine class; a class whose counterfactual tail
+    # score clears blame_min_score is surfaced as a `blame` decision
+    # event, and with blame_target=True its per-class policy is escalated
+    # to the best *replicating* candidate — attribution as a
+    # replication-targeting signal, not just a report
+    blame_quantile: float = 0.99
+    blame_min_score: float = 0.15
+    blame_target: bool = False
     # fleet geometry — usually bound by the scheduler, not the caller
     n_tasks: Optional[int] = None
     capacity: Optional[int] = None
@@ -162,9 +177,11 @@ class FleetPolicyController:
         # structured decision log (repro.obs): every re-plan / drift flush /
         # exploration / ρ-veto lands here and — when tracing is enabled —
         # as a marker on the controller's Perfetto row
+        from repro.obs.blame import StragglerBlame
         from repro.obs.decisions import DecisionLog
 
         self.decisions = DecisionLog()
+        self.blame = StragglerBlame(quantile=self.blame_quantile)
         self._now = 0.0  # latest sim time seen (arrivals / completions)
         self.last_ks_stat = float("nan")  # most recent drift-test statistic
         self._outcomes: deque = deque(maxlen=self.fail_window)
@@ -217,11 +234,15 @@ class FleetPolicyController:
         n_tasks: Optional[int] = None,
         machine_class: Optional[str] = None,
         now: Optional[float] = None,
+        sojourn: Optional[float] = None,
     ) -> None:
         if n_tasks is not None:
             self._job_sizes.append(int(n_tasks))
         if machine_class is not None:
             self._class_jobs.append(machine_class)
+            if sojourn is not None and machine_class not in ("unplaced",):
+                # per-class sojourn attribution for straggler blame
+                self.blame.observe(machine_class, float(sojourn))
         if now is not None:
             self._now = max(self._now, float(now))
         self._jobs += 1
@@ -396,6 +417,55 @@ class FleetPolicyController:
 
         return jax.random.PRNGKey(int(self._rng.integers(2**31)))
 
+    def _apply_blame(self, class_picks: dict, class_rows: dict, n: int) -> None:
+        """Straggler-blame step of a re-plan: surface the attribution in
+        the decision log and (blame_target=True) escalate the blamed
+        class's pick to the best stable *replicating* candidate.
+
+        Replicating exactly the machines that drag the tail is the
+        clone-timing result (arXiv:1710.00748) this wires in: the
+        per-class search already scores candidates under the class's own
+        speed, but its objective is mean sojourn at the class's load — a
+        class that is *the fleet's tail* deserves the tail-optimal policy
+        even when the mean-optimal one is baseline."""
+        blamed = self.blame.blamed(self.blame_min_score)
+        if blamed is None:
+            return
+        ranking = self.blame.ranking()
+        top = ranking[0]
+        escalated = False
+        if (self.blame_target and blamed in class_picks
+                and blamed in class_rows):
+            current = class_picks[blamed]
+            if getattr(current, "is_baseline", False):
+                rows_b = [
+                    r for r in class_rows[blamed]
+                    if not getattr(r["policy"], "is_baseline", False)
+                    and r["rho"] < self.rho_max
+                ]
+                if rows_b:
+                    class_picks[blamed] = min(
+                        rows_b, key=lambda r: self._objective(r, n)
+                    )["policy"]
+                    escalated = True
+        from repro.obs.decisions import DecisionEvent, KIND_BLAME
+
+        args = {
+            "score": round(top.score, 4),
+            "tail_delta": round(top.tail_delta, 6),
+            "share": round(top.share, 4),
+            "escalated": escalated,
+        }
+        if escalated:
+            args["policy"] = class_picks[blamed].label()
+        drifted = self.blame.drifted()
+        if blamed in drifted:
+            args["drift"] = round(drifted[blamed], 3)
+        self.decisions.log(DecisionEvent(
+            t=self._now, kind=KIND_BLAME, label=blamed, trigger="blame",
+            ks_stat=top.ks, n_samples=top.n, args=args,
+        ))
+
     def _reoptimize(self, trigger: str) -> None:
         lam_hat = self.lam_estimate()
         n = self.job_n
@@ -459,6 +529,7 @@ class FleetPolicyController:
         # own speed/blocks (a slow pool saturates at a lower replication
         # level than a fast one)
         class_picks = None
+        class_rows: dict = {}
         if classes is not None and len(classes) > 1:
             shares = self._class_shares()
             class_picks = {}
@@ -472,7 +543,9 @@ class FleetPolicyController:
                     key=self._search_key(), classes=(k,),
                     kernel=self.use_kernel, r_cap=self.r_max + 1, fault=fault,
                 )
+                class_rows[k.name] = rows_k
                 class_picks[k.name] = self._choose(rows_k, n)["policy"]
+            self._apply_blame(class_picks, class_rows, n)
             self._class_policies = dict(class_picks)
         self._policy = pol
         self.rho_hat = pick["rho"]
@@ -545,7 +618,8 @@ class _LegacyProvider:
     def record_task_time(self, seconds, machine_class=None) -> None:
         self.inner.record_task_time(seconds)
 
-    def record_job_complete(self, n_tasks=None, machine_class=None, now=None) -> None:
+    def record_job_complete(self, n_tasks=None, machine_class=None, now=None,
+                            sojourn=None) -> None:
         self.inner.record_job_complete(n_tasks=n_tasks)
 
 

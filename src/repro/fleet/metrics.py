@@ -23,9 +23,11 @@ from .workload import MachineClass
 __all__ = [
     "DagStats",
     "FleetStats",
+    "class_sojourn_sketches",
     "compute_dag_stats",
     "compute_stats",
     "dag_critical_path_shares",
+    "straggler_blame",
     "tail_quantiles",
 ]
 
@@ -55,6 +57,35 @@ def tail_quantiles(x: np.ndarray, qs: Sequence[float]) -> np.ndarray:
     part = np.partition(x, kth)
     frac = pos - lo
     return part[lo] * (1.0 - frac) + part[hi] * frac
+
+
+def class_sojourn_sketches(records: Sequence[JobRecord],
+                           rel_acc: float = 0.01) -> dict:
+    """{machine_class -> QuantileSketch of sojourns} over served records.
+
+    The per-class view the dashboard and the blame layer share: failed /
+    shed records carry no served latency and are skipped, "mixed" pooled
+    jobs keep their own bucket (they belong to no single class)."""
+    from repro.obs.sketch import QuantileSketch
+
+    out: dict = {}
+    for r in records:
+        if r.failed:
+            continue
+        sk = out.get(r.machine_class)
+        if sk is None:
+            sk = out[r.machine_class] = QuantileSketch(rel_acc=rel_acc)
+        sk.add(r.sojourn)
+    return out
+
+
+def straggler_blame(records: Sequence[JobRecord], quantile: float = 0.99):
+    """Post-hoc per-machine-class blame over a finished run's records —
+    the offline counterpart of the controller's streaming tracker.
+    Returns a `repro.obs.blame.StragglerBlame` ready for `ranking()`."""
+    from repro.obs.blame import StragglerBlame
+
+    return StragglerBlame(quantile=quantile).observe_records(records)
 
 
 @dataclasses.dataclass

@@ -1163,8 +1163,11 @@ class FleetScheduler:
             trec.count("jobs_completed")
             trec.count("replicas_launched", rec.n_replicas)
         if self.controller is not None:
+            # sojourn rides along so providers can attribute the finished
+            # job's latency to its machine class (straggler blame)
             self.controller.record_job_complete(
-                n_tasks=job.n_tasks, machine_class=cls_name, now=self.now
+                n_tasks=job.n_tasks, machine_class=cls_name, now=self.now,
+                sojourn=rec.sojourn,
             )
         if self.job_done_hook is not None:
             # barrier hook: the DAG driver releases successor stages here

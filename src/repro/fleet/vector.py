@@ -914,9 +914,15 @@ def _eval_cells(
     else:
         raise ValueError(f'tail must be "exact", "hist", or a HistSpec, got {tail!r}')
 
+    from repro.obs.profile import jit_cache_size
     from repro.obs.trace import PID_PROFILER, get_recorder
 
     rec = get_recorder()
+    # re-trace detection (obs.retrace): the padded-grid contract promises
+    # that re-plans inside one geometry never recompile — observe it by
+    # watching the jit cache across the dispatch
+    _dispatch_fn = _frontier_jit if cell_qs is None else _frontier_faulty_jit
+    _cache_before = jit_cache_size(_dispatch_fn)
     if rec.enabled:
         import time as _time
 
@@ -959,18 +965,32 @@ def _eval_cells(
                       n_jobs=n_jobs, tail="exact" if hist is None else "hist"),
         )
         rec.count("frontier.cells", n_cells)
+        _cache_after = jit_cache_size(_dispatch_fn)
+        if _cache_before is not None and _cache_after is not None:
+            delta = _cache_after - _cache_before
+            if delta > 0:
+                rec.count("obs.retrace", delta)
     stats = np.asarray(stats)[:n_cells]
     if hist is None:
         soj = np.asarray(payload)[:n_cells].reshape(n_cells, -1)
         pcts = np.percentile(soj, (50.0, 99.0, 99.9), axis=1)
         cost_pcts = None
     else:
+        from repro.obs.evtail import evt_keys
+
         s_counts, s_agg, c_counts, c_agg = (np.asarray(p)[:n_cells] for p in payload)
         pcts = np.empty((3, n_cells))
         cost_pcts = np.empty((3, n_cells))
+        # hist cells carry the whole tail shape, so each row additionally
+        # gets the EVT extension (evt_xi / evt_p999 / evt_p9999): a GPD
+        # fitted on the reconstructed sketch's exceedance buckets
+        # extrapolates past the (n_jobs × m_trials) sample's resolution —
+        # the ROADMAP's "p999/p9999 from EVT rather than raw MC"
+        cell_evt = []
         for i in range(n_cells):
             sk = sketch_from_device(s_counts[i], *s_agg[i], spec=hist)
             pcts[:, i] = sk.quantiles((0.5, 0.99, 0.999))
+            cell_evt.append(evt_keys(sk))
             ck = sketch_from_device(c_counts[i], *c_agg[i], spec=hist)
             cost_pcts[:, i] = ck.quantiles((0.5, 0.99, 0.999))
     rows = []
@@ -986,6 +1006,7 @@ def _eval_cells(
             d["cost_p50"], d["cost_p99"], d["cost_p999"] = (
                 float(cost_pcts[j, i]) for j in range(3)
             )
+            d.update(cell_evt[i])
         if slot is not None:  # mirror VectorFleetResult.summary(): per-class util
             for name, u in zip(names, row[nk:]):
                 d[f"util_{name}"] = float(u)

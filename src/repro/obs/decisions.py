@@ -21,12 +21,16 @@ from typing import Optional
 from .trace import PID_CONTROLLER, Recorder, NullRecorder, get_recorder
 
 __all__ = ["DecisionEvent", "DecisionLog",
-           "KIND_REPLAN", "KIND_DRIFT", "KIND_EXPLORE", "KIND_VETO"]
+           "KIND_REPLAN", "KIND_DRIFT", "KIND_EXPLORE", "KIND_VETO",
+           "KIND_BLAME"]
 
 KIND_REPLAN = "replan"
 KIND_DRIFT = "drift"
 KIND_EXPLORE = "explore"
 KIND_VETO = "veto"
+#: straggler attribution surfaced by the controller (repro.obs.blame):
+#: label names the blamed machine class, args carry the score/ranking
+KIND_BLAME = "blame"
 
 
 @dataclasses.dataclass

@@ -24,7 +24,51 @@ import jax
 from .registry import MetricsRegistry
 from .trace import PID_PROFILER, NULL_RECORDER, Recorder, NullRecorder
 
-__all__ = ["kernel_profile"]
+__all__ = ["kernel_profile", "jit_cache_size", "RetraceWatch"]
+
+
+def jit_cache_size(fn) -> Optional[int]:
+    """Number of compiled entries in a `jax.jit` function's trace cache,
+    or None if the wrapped callable does not expose one.
+
+    A growing cache across calls means the call *re-traced* (new static
+    arguments or new input shapes) — the observable behind the fused
+    engines' "padded re-plans never recompile" contract."""
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return None
+
+
+class RetraceWatch:
+    """Context manager flagging re-traces of one jitted fn.
+
+    Usage::
+
+        with RetraceWatch(_frontier_jit) as w:
+            dispatch(...)
+        if w.retraced: rec.count("obs.retrace", w.delta)
+
+    `delta` is 0 (cache hit — the contract held), > 0 (that many fresh
+    compilations), or None when the backend exposes no cache counter (the
+    contract is then unobservable, not violated)."""
+
+    def __init__(self, fn):
+        self.fn = fn
+        self.delta: Optional[int] = None
+
+    def __enter__(self) -> "RetraceWatch":
+        self._before = jit_cache_size(self.fn)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        after = jit_cache_size(self.fn)
+        if self._before is not None and after is not None:
+            self.delta = after - self._before
+
+    @property
+    def retraced(self) -> bool:
+        return bool(self.delta)
 
 
 def _memory_analysis(compiled) -> dict:

@@ -183,6 +183,23 @@ class QuantileSketch:
         return dict(count=self.count, mean=self.mean, min=self.min,
                     max=self.max, p50=p50, p99=p99, p999=p999)
 
+    def exceed_fraction(self, x: float) -> float:
+        """Fraction of observed weight strictly above x (the SLO-violation
+        query).  Bucket-resolved: the bucket containing x contributes
+        nothing, so the answer is exact up to one γ-bucket of blur around
+        x — a relative-accuracy contract matching `quantile`'s."""
+        if self.count == 0:
+            return float("nan")
+        if x < 0:
+            return 1.0
+        if x >= self._max:
+            return 0.0
+        if x <= _ZERO_EPS:
+            return (self.count - self.zero_count) / self.count
+        kx = self.key(x)
+        above = sum(c for k, c in self._store.items() if k > kx)
+        return above / self.count
+
     # ------------------------------------------- device-histogram ingestion
     @classmethod
     def from_bincounts(

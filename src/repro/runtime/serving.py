@@ -133,6 +133,7 @@ class FleetHedgedServer:
         fault=None,
         shed_rho: Optional[float] = None,
         shed_min_priority: int = 1,
+        slos=None,
     ):
         """`capacity` is a single homogeneous replica pool; alternatively
         pass `classes` (a sequence of `repro.fleet.MachineClass`, e.g. a
@@ -177,12 +178,27 @@ class FleetHedgedServer:
         estimated occupancy exceeds it.  Shed / timed-out / failed batches
         come back as `BatchOutcome(failed=True)` and land in the
         serve.shed / serve.timeout / serve.failed counters alongside the
-        fleet.availability / fleet.mttr gauges in `self.metrics`."""
+        fleet.availability / fleet.mttr gauges in `self.metrics`.
+
+        `slos` turns on error-budget tracking (`repro.obs.slo`): one
+        `SLO` applied to every priority class, or a {priority: SLO}
+        mapping.  Each served batch's sojourn lands in the matching
+        tracker's windowed sketch; multi-window burn rates are emitted as
+        `slo.burn_rate{priority,window}` gauges after every
+        `serve_stream` (plus instants on the serving trace row) and
+        summarized by `slo_report()`."""
         from repro.fleet import FleetConfig, FleetSim
+        from repro.obs.trace import resolve_recorder
 
         self.metrics = MetricsRegistry()
+        # resolve obs=True ONCE so the backing sim and the server's own
+        # emissions (SLO burn instants) share the same private recorder
+        self._rec = resolve_recorder(obs)
+        obs = self._rec if self._rec is not None else obs
         self._obs = obs
         self.deadlines = dict(deadlines) if deadlines else {}
+        self.slos = slos
+        self._slo_trackers: dict = {}
 
         if dag is not None:
             from repro.dag import DagFleetConfig, DagFleetSim
@@ -335,6 +351,52 @@ class FleetHedgedServer:
             self.metrics.histogram(
                 "serve.sojourn", labels={"priority": str(int(pri))}
             ).observe(out.sojourn)
+            tracker = self._slo_tracker_for(int(pri))
+            if tracker is not None:
+                tracker.observe(out.finish, out.sojourn)
+        if self._slo_trackers:
+            self._emit_slo()
+
+    def _slo_tracker_for(self, pri: int):
+        """Lazy per-priority tracker creation from the `slos` config."""
+        if self.slos is None:
+            return None
+        tracker = self._slo_trackers.get(pri)
+        if tracker is None:
+            from repro.obs.slo import SLO, SLOTracker
+
+            slo = self.slos if isinstance(self.slos, SLO) else self.slos.get(pri)
+            if slo is None:
+                return None
+            tracker = self._slo_trackers[pri] = SLOTracker(slo)
+        return tracker
+
+    def _emit_slo(self) -> None:
+        """Burn rates → registry gauges + trace instants (serving pid)."""
+        from repro.obs.trace import PID_SERVING, get_recorder
+
+        rec = self._rec if self._rec is not None else get_recorder()
+        for pri, tracker in sorted(self._slo_trackers.items()):
+            now = tracker.window_sketch.now
+            for w, rate in tracker.burn_rates().items():
+                self.metrics.gauge(
+                    "slo.burn_rate",
+                    labels={"priority": str(pri), "window": f"{w:g}"},
+                ).set(rate)
+                if rec.enabled:
+                    rec.instant(
+                        "slo_burn", "serving", now, pid=PID_SERVING,
+                        args={"priority": pri, "window": w,
+                              "burn_rate": round(rate, 4),
+                              "slo": tracker.slo.name},
+                    )
+            self.metrics.gauge(
+                "slo.burning", labels={"priority": str(pri)}
+            ).set(1.0 if tracker.burning() else 0.0)
+
+    def slo_report(self) -> dict:
+        """{priority -> SLOTracker.report()} for every tracked class."""
+        return {p: t.report() for p, t in sorted(self._slo_trackers.items())}
 
     def _observe_degradation(self, report) -> None:
         """Chaos / degradation telemetry into the serving registry: how many
